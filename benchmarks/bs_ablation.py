@@ -1,0 +1,39 @@
+"""Appendix B batch-size ablation: Algorithm 2 at a fixed relative
+budget (m_l = E/8, k0 = 1) across decode batch sizes — the
+activated-expert reduction and its OTPS-model gain shrink as the
+warm-up union saturates the expert set (the effect quantified in §Perf
+iteration 1 at production batch 128)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (DATASETS, eval_tokens, otps_model,
+                               teacher_forced_decode_ce, trained_model)
+from repro.configs.base import XSharePolicy
+
+BATCHES = (4, 8, 16, 32)
+
+
+def run() -> dict:
+    cfg, params, fam, _ = trained_model(32, 4)
+    rows = []
+    for bs in BATCHES:
+        toks = eval_tokens(fam, DATASETS, batch_per=max(1, bs // 4),
+                           seq=40)[:bs]
+        base = teacher_forced_decode_ce(cfg, params, toks,
+                                        XSharePolicy(mode="off"))
+        pol = XSharePolicy(mode="batch", k0=1,
+                           m_l=cfg.moe.num_experts // 8)
+        r = teacher_forced_decode_ce(cfg, params, toks, pol)
+        gain = otps_model(cfg, r["activated"], bs) \
+            / otps_model(cfg, base["activated"], bs) - 1
+        rows.append({"batch": bs,
+                     "base_activated": base["activated"],
+                     "xshare_activated": r["activated"],
+                     "reduction": 1 - r["activated"] / base["activated"],
+                     "otps_gain": gain,
+                     "ce_delta": r["ce"] - base["ce"],
+                     "wall_us_per_step": r["wall_us_per_step"]})
+    return {"rows": rows,
+            "reduction_bs4": rows[0]["reduction"],
+            "reduction_bs32": rows[-1]["reduction"]}

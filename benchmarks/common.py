@@ -1,0 +1,149 @@
+"""Shared benchmark infrastructure.
+
+No AIME/GPQA offline, so the reproduction target is the paper's
+*structure*: trained-router models on synthetic heterogeneous datasets,
+teacher-forced decode-time cross-entropy as the accuracy proxy, and a
+memory-bound OTPS model (decode step time ~ bytes of activated expert
+weights, the paper's own premise) alongside CPU wall times.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ArchConfig, AttnConfig, MoEConfig,
+                                XSharePolicy)
+from repro.data import SyntheticLM, make_dataset_family
+from repro.kernels.ops import moe_step_bytes
+from repro.launch.train import make_train_step
+from repro.models import decode_step, init_params, prefill
+from repro.models.moe import OFF
+from repro.optim import adamw_init, cosine_schedule
+
+DATASETS = ("gpqa", "aime2025", "mmlu-pro", "aa-lcr")
+
+
+def bench_cfg(num_experts: int, top_k: int, *, d_model: int = 64,
+              vocab: int = 256, layers: int = 2,
+              d_ff_expert: int = 64, shared: int = 0) -> ArchConfig:
+    return ArchConfig(
+        name=f"bench-moe-{num_experts}e{top_k}k", family="moe",
+        num_layers=layers, d_model=d_model, d_ff=0, vocab_size=vocab,
+        attn=AttnConfig(num_heads=4, num_kv_heads=2, head_dim=16),
+        moe=MoEConfig(num_experts=num_experts, top_k=top_k,
+                      d_ff_expert=d_ff_expert, num_shared_experts=shared,
+                      d_ff_shared=d_ff_expert if shared else 0),
+    )
+
+
+@functools.lru_cache(maxsize=4)
+def trained_model(num_experts: int, top_k: int, steps: int = 150,
+                  seed: int = 0):
+    """Train a tiny MoE LM on the mixed synthetic dataset family."""
+    cfg = bench_cfg(num_experts, top_k)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(
+        cfg, lr=cosine_schedule(3e-3, 10, steps), remat=False,
+        capacity_factor=4.0))
+    fam = make_dataset_family(cfg.vocab_size, DATASETS)
+    rng = np.random.default_rng(seed)
+    names = list(fam)
+    losses = []
+    for i in range(steps):
+        lm = fam[names[i % len(names)]]
+        toks = jnp.asarray(lm.sample(rng, 8, 64))
+        params, opt, m = step(params, opt, toks)
+        losses.append(float(m["loss"]))
+    return cfg, params, fam, losses
+
+
+def teacher_forced_decode_ce(cfg: ArchConfig, params, tokens: np.ndarray,
+                             policy: XSharePolicy, *,
+                             prefill_len: int = 8,
+                             spec_shape: Optional[Tuple[int, int]] = None
+                             ) -> Dict:
+    """Decode-phase accuracy proxy + activation statistics.
+
+    Teacher-forced: prefill the prompt, then step through positions one
+    token at a time with the XShare policy active (exactly the paper's
+    decode setting), accumulating next-token CE and per-layer activated
+    expert counts. tokens: (B, S) np.int32.
+
+    If spec_shape=(b, t) is given, steps feed t tokens per request at
+    once (speculative verify batch shape) so mode="spec" sees the
+    hierarchical structure.
+    """
+    B, S = tokens.shape
+    toks = jnp.asarray(tokens)
+    t_step = 1 if spec_shape is None else spec_shape[1]
+
+    pre = jax.jit(lambda p, t: prefill(cfg, p, t, cache_len=S + 8,
+                                       capacity_factor=99.0))
+    dec = jax.jit(lambda p, t, c: decode_step(
+        cfg, p, t, c, policy=policy, spec_shape=spec_shape,
+        capacity_factor=99.0))
+
+    logits0, cache, _ = pre(params, toks[:, :prefill_len])
+    nll, cnt = 0.0, 0
+    acts: List[float] = []
+    sel: List[float] = []
+    loads: List[float] = []
+    gmass: List[float] = []
+    wall = 0.0
+    logits0 = jnp.asarray(logits0, jnp.float32)
+    logp = jax.nn.log_softmax(logits0)
+    nll -= float(jnp.take_along_axis(
+        logp, toks[:, prefill_len][:, None], axis=-1).sum())
+    cnt += B
+    pos = prefill_len
+    while pos + t_step <= S - 1:
+        t_in = toks[:, pos:pos + t_step]
+        t0 = time.perf_counter()
+        lg, cache, aux = dec(params, t_in, cache)
+        lg.block_until_ready()
+        wall += time.perf_counter() - t0
+        lgf = jax.nn.log_softmax(jnp.asarray(lg, jnp.float32))
+        tgt = toks[:, pos + 1:pos + t_step + 1]
+        nll -= float(jnp.take_along_axis(lgf, tgt[..., None],
+                                         axis=-1).sum())
+        cnt += B * t_step
+        if aux:
+            acts.append(float(np.mean(np.asarray(
+                aux["activated_experts"]))))
+            sel.append(float(np.mean(np.asarray(aux["selected_set"]))))
+            loads.append(float(np.max(np.asarray(
+                aux["max_group_load"]))))
+            gmass.append(float(np.mean(np.asarray(aux["gate_mass"]))))
+        pos += t_step
+    steps = max(1, len(acts))
+    return {
+        "ce": nll / max(cnt, 1),
+        "activated": float(np.mean(acts)) if acts else float("nan"),
+        "selected": float(np.mean(sel)) if sel else float("nan"),
+        "max_load": float(np.mean(loads)) if loads else float("nan"),
+        "gate_mass": float(np.mean(gmass)) if gmass else float("nan"),
+        "wall_us_per_step": 1e6 * wall / steps,
+    }
+
+
+def otps_model(cfg: ArchConfig, activated: float, tokens: int) -> float:
+    """Relative decode throughput in the memory-bound regime: step time
+    ~ HBM bytes, dominated by activated expert weights (the paper's
+    premise, Sec 1). Returns tokens/sec in model units (1/bytes)."""
+    per_layer = moe_step_bytes(activated, cfg.d_model,
+                               cfg.moe.d_ff_expert, tokens=tokens,
+                               top_k=cfg.moe.top_k)
+    return 1e9 / (per_layer * cfg.num_layers)
+
+
+def eval_tokens(fam, names, *, batch_per: int, seq: int,
+                seed: int = 123) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return np.concatenate(
+        [fam[n].sample(rng, batch_per, seq) for n in names], axis=0)

@@ -1,0 +1,52 @@
+"""Figure 4 / Table 3 / Figure 7 — Algorithm 2 (batch-aware selection)
+sweep over (budget m_l, warm-up k0) at batch size 16, no speculation:
+decode-time accuracy proxy (teacher-forced CE delta vs baseline),
+activated experts, gating mass, and OTPS (memory-bound byte model +
+relative gain) per configuration.
+
+Paper budgets are for E=128; we run E=32 and scale budgets by E/4 so the
+relative sparsity matches Table 3's (m_l, k0) grid.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (DATASETS, eval_tokens, otps_model,
+                               teacher_forced_decode_ce, trained_model)
+from repro.configs.base import XSharePolicy
+
+# Table 3 grid (m_l scaled /4 for E=32 vs paper's E=128)
+CONFIGS = [(0, 1), (3, 1), (4, 1), (6, 1), (8, 1), (0, 2), (3, 2),
+           (6, 0)]
+BATCH = 16
+
+
+def run() -> dict:
+    cfg, params, fam, losses = trained_model(32, 4)
+    toks = eval_tokens(fam, DATASETS, batch_per=BATCH // 4, seq=48)
+    base = teacher_forced_decode_ce(cfg, params, toks,
+                                    XSharePolicy(mode="off"))
+    base_otps = otps_model(cfg, base["activated"], BATCH)
+    rows = [{"config": "baseline", "m_l": None, "k0": None, **base,
+             "otps_rel": 1.0, "ce_delta": 0.0}]
+    for m_l, k0 in CONFIGS:
+        pol = XSharePolicy(mode="batch", k0=k0, m_l=m_l)
+        r = teacher_forced_decode_ce(cfg, params, toks, pol)
+        otps = otps_model(cfg, r["activated"], BATCH)
+        rows.append({"config": f"({m_l},{k0})", "m_l": m_l, "k0": k0,
+                     **r, "otps_rel": otps / base_otps,
+                     "ce_delta": r["ce"] - base["ce"]})
+    # paper-claim checks: the (m_l=16,k0=1)-equivalent config (4,1)
+    # gains throughput with small quality loss; (0,1) is fastest but
+    # degrades most (Sec 6.1)
+    c41 = next(r for r in rows if r["config"] == "(4,1)")
+    c01 = next(r for r in rows if r["config"] == "(0,1)")
+    return {
+        "rows": rows,
+        "train_loss_first_last": (losses[0], losses[-1]),
+        "reduction_at_(4,1)": 1 - c41["activated"] / base["activated"],
+        "otps_gain_at_(4,1)": c41["otps_rel"] - 1,
+        "ce_delta_at_(4,1)": c41["ce_delta"],
+        "otps_gain_at_(0,1)": c01["otps_rel"] - 1,
+        "ce_delta_at_(0,1)": c01["ce_delta"],
+    }

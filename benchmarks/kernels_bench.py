@@ -1,0 +1,53 @@
+"""Kernel-level benchmark: the XShare masked MoE FFN's byte-traffic
+model vs activation count (the mechanism behind every OTPS number), plus
+oracle-path wall times on CPU for scale reference. The Pallas kernel
+itself runs in interpret mode here (Python), so its wall time is not
+meaningful; the HBM-byte model is what transfers to TPU."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import moe_step_bytes, xshare_moe_ffn
+from repro.kernels.ref import moe_ffn_ref
+
+
+def run() -> dict:
+    T, d, E, f = 32, 256, 32, 512
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    x = jax.random.normal(ks[0], (T, d), jnp.float32)
+    w1 = jax.random.normal(ks[1], (E, d, f)) * 0.05
+    w3 = jax.random.normal(ks[2], (E, d, f)) * 0.05
+    w2 = jax.random.normal(ks[3], (E, f, d)) * 0.05
+    logits = jax.random.normal(ks[4], (T, E))
+    top, idx = jax.lax.top_k(logits, 4)
+    w = jax.nn.softmax(top, -1)
+    combine_full = (jax.nn.one_hot(idx, E) * w[..., None]).sum(-2)
+
+    ref_jit = jax.jit(moe_ffn_ref)
+    rows = []
+    for n_act in (32, 24, 16, 8, 4):
+        active = jnp.arange(E) < n_act
+        combine = jnp.where(active[None], combine_full, 0.0)
+        # correctness cross-check on this activation pattern
+        out_k = xshare_moe_ffn(x, w1, w3, w2, combine, active,
+                               max_active=n_act, block_f=128)
+        out_r = ref_jit(x, w1, w3, w2, combine, active)
+        err = float(jnp.abs(out_k - out_r).max())
+        # oracle wall time (dense path: no savings — the contrast point)
+        ref_jit(x, w1, w3, w2, combine, active).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(20):
+            ref_jit(x, w1, w3, w2, combine, active).block_until_ready()
+        wall_us = (time.perf_counter() - t0) / 20 * 1e6
+        bytes_model = moe_step_bytes(n_act, d, f, tokens=T, top_k=4)
+        rows.append({"active": n_act, "kernel_vs_ref_err": err,
+                     "dense_ref_us": wall_us,
+                     "hbm_bytes_model": bytes_model,
+                     "bytes_rel": bytes_model
+                     / moe_step_bytes(E, d, f, tokens=T, top_k=4)})
+    return {"rows": rows,
+            "bytes_at_quarter_activation": rows[-2]["bytes_rel"]}

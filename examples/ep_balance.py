@@ -1,0 +1,83 @@
+"""Expert-parallel deployment demo with an EXPLICIT shard_map all-to-all
+(the collective the paper's Sec 5 loads refer to), comparing plain greedy
+selection vs Algorithm 6's GPU-aware selection on per-device load.
+
+Runs on 8 forced host devices (set before jax import):
+
+    PYTHONPATH=src python examples/ep_balance.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import functools                               # noqa: E402
+
+import jax                                     # noqa: E402
+import jax.numpy as jnp                        # noqa: E402
+import numpy as np                             # noqa: E402
+from jax.sharding import PartitionSpec as P    # noqa: E402
+
+from repro.configs.base import MoEConfig, XSharePolicy  # noqa: E402
+from repro.core.metrics import per_group_load  # noqa: E402
+from repro.kernels.ref import moe_ffn_ref      # noqa: E402
+from repro.models.moe import OFF, init_moe, route  # noqa: E402
+
+G = 8                       # device groups == mesh "model" extent
+E, K, D, F, T = 64, 8, 64, 128, 32
+
+mesh = jax.make_mesh((G,), ("model",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+
+
+@functools.partial(
+    jax.shard_map, mesh=mesh,
+    in_specs=(P(), P("model"), P("model"), P("model"), P(), P()),
+    out_specs=P())
+def ep_forward(x, w1, w3, w2, combine, active):
+    """Explicit expert parallelism: every device holds E/G experts;
+    tokens are replicated in, each shard computes ITS experts' masked
+    FFN contribution, and a psum combines — the dispatch/combine
+    all-to-all of GShard collapses to a psum here because the demo
+    replicates tokens (decode batches are small)."""
+    g = jax.lax.axis_index("model")
+    e_lo = g * (E // G)
+    local_combine = jax.lax.dynamic_slice(combine, (0, e_lo),
+                                          (T, E // G))
+    local_active = jax.lax.dynamic_slice(active, (e_lo,), (E // G,))
+    y_local = moe_ffn_ref(x, w1, w3, w2, local_combine, local_active)
+    return jax.lax.psum(y_local, "model")
+
+
+def main() -> None:
+    moe = MoEConfig(num_experts=E, top_k=K, d_ff_expert=F)
+    params = init_moe(jax.random.PRNGKey(0), moe, D, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, D))
+
+    print(f"{E} experts over {G} devices ({E//G}/device), batch {T}, "
+          f"top-{K}\n")
+    for name, pol in [
+            ("vanilla top-k", OFF),
+            ("Alg 1 greedy (m=24)", XSharePolicy(mode="batch", k0=0,
+                                                 m_l=24)),
+            ("Alg 6 EP-aware (k0=1, m_g=3)",
+             XSharePolicy(mode="ep", k0=1, m_g=3, num_groups=G))]:
+        idx, w, aux = route(params, x, moe, pol)
+        one_hot = jax.nn.one_hot(idx, E)
+        combine = (one_hot * w[..., None]).sum(-2)
+        active = (combine > 0).any(0)
+        loads = np.asarray(per_group_load(active, G))
+        y = ep_forward(x, params["w1"], params["w3"], params["w2"],
+                       combine, active)
+        ref = moe_ffn_ref(x, params["w1"], params["w3"], params["w2"],
+                          combine, active)
+        ok = bool(jnp.allclose(y, ref, atol=1e-4))
+        print(f"{name:30s} active {int(active.sum()):2d}  "
+              f"per-device {loads}  MaxLoad {loads.max()}  "
+              f"shard_map==ref {ok}")
+    print("\nLayer latency tracks MaxLoad (all shards sync at the "
+          "combine); Alg 6 trades gate mass for a flat profile.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: XShare batch-aware expert selection in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a small MoE layer, routes a decode batch with vanilla top-k vs
+the paper's three algorithms, and prints the activation statistics each
+one is designed to optimize.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig, XSharePolicy
+from repro.core.metrics import gate_mass_captured, max_group_load
+from repro.models.moe import OFF, init_moe, route
+
+E, K, D, BATCH = 64, 8, 128, 16
+
+moe = MoEConfig(num_experts=E, top_k=K, d_ff_expert=256)
+params = init_moe(jax.random.PRNGKey(0), moe, D, jnp.float32)
+x = jax.random.normal(jax.random.PRNGKey(1), (BATCH, D))  # decode batch
+
+policies = {
+    "vanilla top-k":            OFF,
+    "Alg 2  batch (k0=1,m=16)": XSharePolicy(mode="batch", k0=1, m_l=16),
+    "Alg 2  warm-up only":      XSharePolicy(mode="batch", k0=1, m_l=0),
+    "Alg 4  spec (m_r=6)":      XSharePolicy(mode="spec", k0=1, m_l=0,
+                                             m_r=6),
+    "Alg 6  EP (m_g=3, G=8)":   XSharePolicy(mode="ep", k0=1, m_g=3,
+                                             num_groups=8),
+}
+
+print(f"MoE: {E} experts, top-{K}, decode batch {BATCH}")
+print(f"{'policy':28s} {'activated':>9s} {'selected':>8s} "
+      f"{'max/GPU':>7s} {'gate mass':>9s}")
+for name, pol in policies.items():
+    spec_shape = (4, 4) if pol.mode == "spec" else None
+    idx, w, aux = route(params, x, moe, pol, spec_shape=spec_shape)
+    print(f"{name:28s} {int(aux['activated_experts']):9d} "
+          f"{int(aux['selected_set']):8d} "
+          f"{int(aux['max_group_load']):7d} "
+          f"{float(aux['gate_mass']):9.3f}")
+
+print("\nEvery token still gets top-k routing WITHIN the selected set —")
+print("fewer expert weights stream from HBM per decode step, which is")
+print("the whole game in the memory-bound decode regime (paper Sec 1).")

@@ -1,0 +1,56 @@
+"""Checkpointing: pytree <-> npz with path-keyed entries + JSON metadata.
+
+Host-side (np.asarray gathers); fine for the single-process container and
+the structure mirrors what a sharded writer would key on (tree paths).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            # npz has no bfloat16 — store upcast, restore re-casts
+            arr = np.asarray(jax.numpy.asarray(leaf, jax.numpy.float32))
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path: str, tree, *, step: Optional[int] = None,
+                    extra: Optional[Dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    meta = {"step": step, "extra": extra or {},
+            "keys": sorted(flat), "dtypes": {k: str(v.dtype)
+                                             for k, v in flat.items()}}
+    with open((path[:-4] if path.endswith(".npz") else path) + ".json",
+              "w") as f:
+        json.dump(meta, f, indent=1)
+
+
+def restore_checkpoint(path: str, target):
+    """Restore into the structure of `target` (values replaced)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+    leaves = []
+    for path_elems, leaf in paths:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path_elems)
+        arr = npz[key]
+        assert arr.shape == np.shape(leaf), (key, arr.shape, np.shape(leaf))
+        leaves.append(jax.numpy.asarray(arr).astype(
+            jax.numpy.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

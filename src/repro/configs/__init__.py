@@ -1,0 +1,4 @@
+from repro.configs.base import (  # noqa: F401
+    ArchConfig, AttnConfig, MoEConfig, SSMConfig, ShapeConfig, XSharePolicy,
+    round_up,
+)

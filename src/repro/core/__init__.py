@@ -1,0 +1,8 @@
+"""XShare core — batch-aware expert selection (the paper's contribution)."""
+from repro.core.selection import (  # noqa: F401
+    topk_mask, warmup_union, greedy_select, batch_select,
+    per_request_select, spec_select, ep_select, restricted_topk,
+    apply_policy,
+)
+from repro.core import routing, metrics  # noqa: F401
+from repro.configs.base import XSharePolicy  # noqa: F401

@@ -1,0 +1,53 @@
+"""Expert-activation metrics — the quantities the paper's tables report."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def activated_experts(combine: jnp.ndarray) -> jnp.ndarray:
+    """|union of experts any token routed to| for one layer.
+
+    combine: (T, E) combine/weight matrix (zero == not routed).
+    """
+    return (jnp.abs(combine) > 0).any(axis=0).sum()
+
+
+def activated_mask(combine: jnp.ndarray) -> jnp.ndarray:
+    return (jnp.abs(combine) > 0).any(axis=0)
+
+
+def per_group_load(active: jnp.ndarray, num_groups: int) -> jnp.ndarray:
+    """Per device-group activated-expert counts (contiguous partition)."""
+    E = active.shape[-1]
+    assert E % num_groups == 0
+    return active.reshape(num_groups, E // num_groups).sum(axis=-1)
+
+
+def max_group_load(active: jnp.ndarray, num_groups: int) -> jnp.ndarray:
+    """MaxLoad(S) — the paper's bottleneck-GPU metric (Sec 5.1)."""
+    return per_group_load(active, num_groups).max()
+
+
+def gate_mass_captured(gates: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of total gating probability mass inside the selected set —
+    the modular proxy objective f(S), normalized."""
+    total = gates.sum()
+    kept = jnp.where(mask[None, :], gates, 0.0).sum()
+    return kept / jnp.maximum(total, 1e-30)
+
+
+def expected_activated(num_experts: int, top_k: int, batch: int) -> float:
+    """Closed-form E[N_a] = N(1-(1-k/N)^B) from the introduction."""
+    return num_experts * (1.0 - (1.0 - top_k / num_experts) ** batch)
+
+
+def topk_overlap(idx_a: jnp.ndarray, idx_b: jnp.ndarray,
+                 num_experts: int) -> jnp.ndarray:
+    """|TopK(a) ∩ TopK(b)| — Fig 3's overlap statistic.
+
+    idx_a, idx_b: (..., k) expert indices.
+    """
+    import jax
+    a = jax.nn.one_hot(idx_a, num_experts, dtype=bool).any(axis=-2)
+    b = jax.nn.one_hot(idx_b, num_experts, dtype=bool).any(axis=-2)
+    return (a & b).sum(axis=-1)

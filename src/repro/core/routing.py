@@ -1,0 +1,52 @@
+"""Router / gating primitives shared by the MoE layers and the core algos."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def router_probs(x: jnp.ndarray, w_g: jnp.ndarray,
+                 bias: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full gating distribution g(x) = softmax(W_g x) over all experts.
+
+    x: (T, d), w_g: (d, E). Returns (logits (T, E), probs (T, E)) in f32 —
+    routing decisions are always taken in full precision.
+    """
+    logits = jnp.asarray(x, jnp.float32) @ jnp.asarray(w_g, jnp.float32)
+    if bias is not None:
+        logits = logits + bias
+    return logits, jax.nn.softmax(logits, axis=-1)
+
+
+def topk_route(logits: jnp.ndarray, k: int, *, normalize: bool = True
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Vanilla per-token top-k routing (Sec 2.2): indices + gate weights.
+
+    Weights are softmax over the selected logits when normalize=True
+    (Mixtral/DeepSeek convention), else raw softmax probabilities of the
+    full distribution at the selected slots.
+    """
+    top_l, idx = jax.lax.top_k(logits, k)
+    if normalize:
+        w = jax.nn.softmax(top_l, axis=-1)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w = jnp.take_along_axis(probs, idx, axis=-1)
+    return idx, w
+
+
+def dispatch_combine_weights(idx: jnp.ndarray, w: jnp.ndarray,
+                             num_experts: int
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """GShard-style dense dispatch/combine tensors from sparse routing.
+
+    idx, w: (T, k). Returns (dispatch (T, E) bool — token goes to expert,
+    combine (T, E) — gate weight, zero off the routed slots).
+    """
+    one_hot = jax.nn.one_hot(idx, num_experts, dtype=w.dtype)  # (T,k,E)
+    combine = (one_hot * w[..., None]).sum(axis=-2)            # (T,E)
+    dispatch = combine > 0
+    return dispatch, combine

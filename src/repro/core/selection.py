@@ -1,0 +1,210 @@
+"""XShare batch-aware expert selection — Algorithms 1-6 of the paper.
+
+All functions are pure jnp with static shapes (budgets are Python ints),
+so they jit/pjit cleanly inside a model forward pass. Expert sets are
+represented as boolean masks over the expert axis; "selecting top-m"
+with m == 0 degenerates to the warm-up set alone, matching the paper's
+(m=0, k0>=1) configurations.
+
+Scores: the paper aggregates the router's full gating vector
+G_i = softmax(W_g x_i) over the batch (Sec 3.1). Callers pass those
+full (pre-top-k) probabilities, shape (..., num_experts).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_BIG = 1e9  # priority bonus that dominates any sum of probabilities
+
+
+def topk_mask(scores: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Boolean mask of the top-k entries along the last axis.
+
+    k == 0 returns an all-False mask. Ties are broken by index
+    (jax.lax.top_k is deterministic), matching a stable argsort.
+    """
+    E = scores.shape[-1]
+    if k <= 0:
+        return jnp.zeros(scores.shape, dtype=bool)
+    k = min(k, E)
+    _, idx = jax.lax.top_k(scores, k)          # (..., k)
+    return jax.nn.one_hot(idx, E, dtype=bool).any(axis=-2)  # (..., E)
+
+
+def warmup_union(gates: jnp.ndarray, k0: int) -> jnp.ndarray:
+    """S0 = union over tokens of each token's top-k0 experts.
+
+    gates: (..., T, E) -> mask (..., E).
+    """
+    if k0 <= 0:
+        return jnp.zeros(gates.shape[:-2] + gates.shape[-1:], dtype=bool)
+    per_token = topk_mask(gates, k0)          # (..., T, E)
+    return per_token.any(axis=-2)             # (..., E)
+
+
+def greedy_select(gates: jnp.ndarray, m: int,
+                  warmup: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Algorithm 1 — GreedySelect.
+
+    The proxy objective f(S) = sum_{j in S} sum_i g_ij is modular
+    (Prop 3.2), so greedy == sorting experts by aggregated gating score
+    and taking the top-m among experts not already in the warm-up set
+    (Cor 3.3). Returns warmup | top_m(aggregated, E \\ warmup).
+
+    gates: (T, E); warmup: (E,) bool or None; m: experts added beyond S0.
+    """
+    E = gates.shape[-1]
+    agg = gates.sum(axis=0)                   # (E,) batch-aggregated utility
+    if warmup is None:
+        warmup = jnp.zeros((E,), dtype=bool)
+    if m <= 0:
+        return warmup
+    # Exclude warm-up members from the greedy pool; if fewer than m
+    # non-warm-up experts exist, top_k re-picks warm-up entries, which
+    # the union makes a no-op.
+    pool = jnp.where(warmup, -jnp.inf, agg)
+    return warmup | topk_mask(pool, min(m, E))
+
+
+def batch_select(gates: jnp.ndarray, m_l: int, k0: int) -> jnp.ndarray:
+    """Algorithm 2 (selection phase) — warm-up + batch-level greedy.
+
+    gates: (T, E) full router probabilities for every token in the batch.
+    Returns the per-layer expert mask S_l, shape (E,).
+    """
+    s0 = warmup_union(gates, k0)
+    return greedy_select(gates, m_l, s0)
+
+
+def per_request_select(gates: jnp.ndarray, m_r: int, k0: int) -> jnp.ndarray:
+    """Algorithm 3 — per-request greedy selection, vectorized over requests.
+
+    gates: (b, t, E) where t = 1 + L_s tokens of each request.
+    Returns per-request masks S_r, shape (b, E).
+    """
+    s0 = warmup_union(gates, k0)              # (b, E)
+    agg = gates.sum(axis=-2)                  # (b, E)
+    if m_r <= 0:
+        return s0
+    pool = jnp.where(s0, -jnp.inf, agg)
+    return s0 | topk_mask(pool, min(m_r, gates.shape[-1]))
+
+
+def spec_select(gates: jnp.ndarray, m: int, m_r: int, k0: int) -> jnp.ndarray:
+    """Algorithm 4 — speculative-decoding-aware hierarchical selection.
+
+    Exploits intra-request expert-preference correlation (Assumption 4.1):
+    each request first gets its own small budget m_r (warm-up k0 inside),
+    the per-request sets are unioned, and batch-level greedy tops up to
+    the batch budget m.
+
+    gates: (b, 1+L_s, E). Returns S_batch, shape (E,).
+    """
+    s_r = per_request_select(gates, m_r, k0)  # (b, E)
+    s_batch = s_r.any(axis=0)                 # union across requests
+    flat = gates.reshape(-1, gates.shape[-1])
+    return greedy_select(flat, m, s_batch)
+
+
+def ep_select(gates: jnp.ndarray, m_g: int, num_groups: int, k0: int,
+              *, strict_cap: bool = True) -> jnp.ndarray:
+    """Algorithms 5+6 — expert-parallelism-aware selection.
+
+    Experts are partitioned contiguously into `num_groups` device groups
+    (group g owns experts [g*E/G, (g+1)*E/G) — exactly how the expert
+    axis shards over the mesh "model" axis). Round-robin greedy over
+    groups with independent per-group budgets is equivalent to taking
+    the top-m_g experts *within each group* by aggregated score, which
+    enforces MaxLoad(S) <= m_g by construction.
+
+    strict_cap=True (default) counts warm-up members against the group
+    budget (warm-up experts get +BIG priority so they are kept first),
+    guaranteeing the paper's MaxLoad bound. strict_cap=False unions the
+    warm-up set on top (load may exceed m_g where warm-up is dense).
+
+    gates: (T, E). Returns mask (E,).
+    """
+    T, E = gates.shape
+    assert E % num_groups == 0, (E, num_groups)
+    per = E // num_groups
+    s0 = warmup_union(gates, k0)              # (E,)
+    agg = gates.sum(axis=0)                   # (E,)
+    if m_g <= 0:
+        return s0 if not strict_cap else jnp.zeros((E,), bool)
+    prio = agg + _BIG * s0.astype(agg.dtype)
+    grouped = prio.reshape(num_groups, per)
+    picked = topk_mask(grouped, min(m_g, per)).reshape(E)
+    if strict_cap:
+        return picked
+    return picked | s0
+
+
+def restricted_topk(gates: jnp.ndarray, mask: jnp.ndarray, k: int,
+                    *, logits: Optional[jnp.ndarray] = None,
+                    normalize: bool = True
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Refinement step — per-token top-k routing *within* the selected set.
+
+    gates: (T, E) full probabilities; mask: (E,) the XShare set S.
+    Returns (indices (T, k), weights (T, k)). Weights renormalize the
+    selected logits (softmax over the chosen k), matching Sec 2.2's
+    gating; entries whose expert fell outside S (possible when |S| < k)
+    get zero weight.
+
+    If `logits` (pre-softmax router outputs) is given, the renormalized
+    weights use them directly — numerically identical to softmax over
+    probabilities up to the shared normalizer.
+    """
+    T, E = gates.shape
+    k = min(k, E)
+    masked = jnp.where(mask[None, :], gates, -jnp.inf)
+    top_g, idx = jax.lax.top_k(masked, k)     # (T, k)
+    valid = jnp.isfinite(top_g)
+    if normalize:
+        src = logits if logits is not None else jnp.log(
+            jnp.clip(gates, 1e-30, None))
+        sel_logits = jnp.take_along_axis(src, idx, axis=-1)
+        sel_logits = jnp.where(valid, sel_logits, -jnp.inf)
+        w = jax.nn.softmax(sel_logits, axis=-1)
+        w = jnp.where(valid, w, 0.0)
+        # all-invalid row (|S| == 0): zero weights, not NaN
+        w = jnp.where(valid.any(axis=-1, keepdims=True), w, 0.0)
+    else:
+        w = jnp.where(valid, top_g, 0.0)
+    return idx, w
+
+
+def apply_policy(gates: jnp.ndarray, policy, *, top_k: int,
+                 spec_shape: Optional[Tuple[int, int]] = None,
+                 logits: Optional[jnp.ndarray] = None):
+    """Dispatch a full XSharePolicy at one MoE layer.
+
+    gates: (T, E) full router probabilities (T = all tokens this step).
+    spec_shape: (num_requests, tokens_per_request) — required for
+    mode="spec"; T must equal their product.
+
+    Returns (indices (T, top_k), weights (T, top_k), mask (E,)).
+    """
+    T, E = gates.shape
+    mode = policy.mode
+    if mode == "off":
+        mask = jnp.ones((E,), dtype=bool)
+    elif mode == "batch":
+        mask = batch_select(gates, policy.m_l, policy.k0)
+    elif mode == "spec":
+        if spec_shape is None:
+            raise ValueError("mode='spec' needs spec_shape=(b, 1+L_s)")
+        b, t = spec_shape
+        assert b * t == T, (b, t, T)
+        mask = spec_select(gates.reshape(b, t, E), policy.m_l,
+                           policy.m_r, policy.k0)
+    elif mode == "ep":
+        mask = ep_select(gates, policy.m_g, policy.num_groups, policy.k0,
+                         strict_cap=policy.strict_cap)
+    else:
+        raise ValueError(f"unknown XShare mode {mode!r}")
+    idx, w = restricted_topk(gates, mask, top_k, logits=logits)
+    return idx, w, mask

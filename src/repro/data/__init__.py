@@ -1,0 +1,3 @@
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticLM, make_dataset_family, batches, mixed_request_batch,
+)

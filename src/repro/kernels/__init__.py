@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical serving hot spots, validated
+in interpret mode against the pure-jnp oracles in ref.py."""
+from repro.kernels.ops import (  # noqa: F401
+    xshare_moe_ffn, flash_decode, ssd_chunk_scan, moe_step_bytes,
+)
+from repro.kernels import ref  # noqa: F401

@@ -1,0 +1,60 @@
+"""Public jit'd wrappers around the Pallas kernels, plus byte-traffic
+models used by the roofline analysis and OTPS modeling.
+
+On this CPU container the kernels execute in interpret mode; on TPU
+the same call sites compile natively (interpret=False).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn import decode_attention
+from repro.kernels.moe_ffn import moe_ffn
+from repro.kernels.ssd_scan import ssd_scan
+
+__all__ = ["xshare_moe_ffn", "flash_decode", "ssd_chunk_scan",
+           "moe_step_bytes"]
+
+
+def xshare_moe_ffn(x, w1, w3, w2, combine, active, *,
+                   max_active: Optional[int] = None, block_f: int = 512,
+                   interpret: bool = True):
+    """Masked expert FFN; weight HBM traffic ~ max_active, not E."""
+    E = w1.shape[0]
+    ma = E if max_active is None else min(max_active, E)
+    bf = block_f
+    while w1.shape[2] % bf:
+        bf //= 2
+    return moe_ffn(x, w1, w3, w2, combine, active, max_active=ma,
+                   block_f=bf, interpret=interpret)
+
+
+def flash_decode(q, k, v, lengths, *, block_s: int = 512,
+                 interpret: bool = True):
+    return decode_attention(q, k, v, lengths, block_s=block_s,
+                            interpret=interpret)
+
+
+def ssd_chunk_scan(x, dt, A, Bm, Cm, *, chunk: int = 128, block_h: int = 8,
+                   interpret: bool = True):
+    bh = block_h
+    while x.shape[2] % bh:
+        bh //= 2
+    return ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, block_h=bh,
+                    interpret=interpret)
+
+
+def moe_step_bytes(num_active: float, d_model: int, d_ff: int,
+                   dtype_bytes: int = 2, *, tokens: int = 0,
+                   top_k: int = 0) -> float:
+    """HBM bytes per MoE layer per decode step under XShare.
+
+    Expert weights dominate in the decode regime (the paper's premise):
+    3 * d * f per expert, fetched once per step for each *activated*
+    expert; activations add 2*T*d + routed intermediate traffic.
+    """
+    w = num_active * 3 * d_model * d_ff * dtype_bytes
+    act = tokens * d_model * dtype_bytes * (2 + 2 * top_k)
+    return w + act

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_ffn_ref(x: jnp.ndarray, w1: jnp.ndarray, w3: jnp.ndarray,
+                w2: jnp.ndarray, combine: jnp.ndarray,
+                active: jnp.ndarray) -> jnp.ndarray:
+    """XShare masked expert FFN.
+
+    x: (T, d); w1/w3: (E, d, f); w2: (E, f, d); combine: (T, E) gate
+    weights (0 = token not routed to expert); active: (E,) bool — the
+    XShare-selected set. y = sum_e active_e * combine[:, e] * FFN_e(x).
+    """
+    xf = jnp.asarray(x, jnp.float32)
+    h = jnp.einsum("td,edf->etf", xf, jnp.asarray(w1, jnp.float32))
+    g = jnp.einsum("td,edf->etf", xf, jnp.asarray(w3, jnp.float32))
+    h = jax.nn.silu(h) * g
+    y_e = jnp.einsum("etf,efd->etd", h, jnp.asarray(w2, jnp.float32))
+    w = jnp.where(active[:, None], combine.T, 0.0)          # (E, T)
+    y = jnp.einsum("etd,et->td", y_e, jnp.asarray(w, jnp.float32))
+    return y.astype(x.dtype)
+
+
+def decode_attn_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    lengths: jnp.ndarray) -> jnp.ndarray:
+    """Flash-decode oracle: one query token per sequence vs a KV cache.
+
+    q: (B, H, dh); k/v: (B, S, Hkv, dh); lengths: (B,) valid cache length.
+    """
+    B, H, dh = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    qf = jnp.asarray(q, jnp.float32)
+    kf = jnp.repeat(jnp.asarray(k, jnp.float32), rep, axis=2)
+    vf = jnp.repeat(jnp.asarray(v, jnp.float32), rep, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", qf, kf) / jnp.sqrt(float(dh))
+    mask = jnp.arange(k.shape[1])[None, :] < lengths[:, None]   # (B,S)
+    s = jnp.where(mask[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, vf)
+    return out.astype(q.dtype)
+
+
+def ssd_chunk_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                  Bm: jnp.ndarray, Cm: jnp.ndarray,
+                  init_state: Optional[jnp.ndarray] = None):
+    """Sequential SSM recurrence oracle for the SSD kernel.
+
+    x: (B,S,nh,hd); dt: (B,S,nh); A: (nh,); Bm/Cm: (B,S,nh,ds)
+    (already broadcast over groups). Returns (y (B,S,nh,hd),
+    final_state (B,nh,hd,ds)).
+    """
+    Bsz, S, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    st = jnp.zeros((Bsz, nh, hd, ds), jnp.float32) if init_state is None \
+        else jnp.asarray(init_state, jnp.float32)
+
+    def step(st, inp):
+        xt, dtt, bt, ct = inp
+        dA = jnp.exp(dtt * A)                              # (B,nh)
+        st = st * dA[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bhs->bhps", dtt, xt, bt)
+        y = jnp.einsum("bhs,bhps->bhp", ct, st)
+        return st, y
+
+    xs = (jnp.asarray(x, jnp.float32).transpose(1, 0, 2, 3),
+          jnp.asarray(dt, jnp.float32).transpose(1, 0, 2),
+          jnp.asarray(Bm, jnp.float32).transpose(1, 0, 2, 3),
+          jnp.asarray(Cm, jnp.float32).transpose(1, 0, 2, 3))
+    st, ys = jax.lax.scan(step, st, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), st

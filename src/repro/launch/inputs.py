@@ -1,0 +1,73 @@
+"""ShapeDtypeStruct input stand-ins per (arch x shape) — shardable,
+weak-type-correct, no device allocation — plus the per-combination
+decisions (forced sliding window for long-context dense decode, XShare
+policy defaults for MoE archs).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig, XSharePolicy
+from repro.models import init_cache
+
+CACHE_MARGIN = 512      # decode-cache slack: spec verify room + shard-
+                        # divisibility alignment (512 | every mesh extent)
+LONG_CTX_WINDOW = 4096  # forced sliding window for full-attention archs
+                        # at long_500k (DESIGN.md §5)
+
+
+def force_window_for(cfg: ArchConfig, shape: ShapeConfig) -> Optional[int]:
+    """long_500k on a full-attention arch => explicit windowed variant.
+    (h2o-danube already has a native 4096 window; ssm/hybrid run native.)"""
+    if shape.name != "long_500k" or not cfg.has_attention:
+        return None
+    if cfg.family == "hybrid":
+        return None                   # few shared-attn caches: keep full
+    if cfg.attn.sliding_window:
+        return None                   # native SWA
+    return LONG_CTX_WINDOW
+
+
+def policy_for(cfg: ArchConfig, shape: ShapeConfig) -> XSharePolicy:
+    """Paper-faithful default: XShare batch-aware selection on MoE decode
+    (Alg 2, the (m_l=16, k0=1) configuration of Table 3)."""
+    if cfg.has_moe and shape.kind == "decode":
+        return XSharePolicy(mode="batch", k0=1, m_l=16)
+    return XSharePolicy(mode="off")
+
+
+def decode_cache_len(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    return shape.cache_len + CACHE_MARGIN
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16, cache_dtype=None) -> Dict:
+    """Returns {tokens, prefix_embeds?, cache?} of ShapeDtypeStructs."""
+    B = shape.global_batch
+    out: Dict = {}
+    tok = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        S = shape.seq_len - cfg.prefix_len
+        if cfg.family == "audio":
+            out["tokens"] = jax.ShapeDtypeStruct((B, S, cfg.num_codebooks),
+                                                 tok)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((B, S), tok)
+        if cfg.prefix_len:
+            out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.prefix_len, cfg.d_model), dtype)
+    else:  # decode
+        if cfg.family == "audio":
+            out["tokens"] = jax.ShapeDtypeStruct((B, 1, cfg.num_codebooks),
+                                                 tok)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((B, 1), tok)
+        fw = force_window_for(cfg, shape)
+        C = decode_cache_len(cfg, shape)
+        cdt = cache_dtype or dtype
+        out["cache"] = jax.eval_shape(
+            lambda: init_cache(cfg, B, C, cdt, force_window=fw))
+    return out

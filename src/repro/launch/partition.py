@@ -1,0 +1,218 @@
+"""Partitioning rules: param / optimizer / cache / activation
+PartitionSpecs per architecture, by tree-path pattern (t5x-style).
+
+Scheme (see DESIGN.md §7):
+  * "model" axis (16-way): tensor parallel for dense projections
+    (heads / d_ff / vocab), EXPERT parallel for MoE expert weights —
+    the paper's G GPU groups == contiguous expert ranges per model-axis
+    shard, so Alg 5/6's MaxLoad is the per-shard activated-expert count.
+  * "data" (and "pod") axes: batch for train/prefill/decode; for
+    batch-1 long-context decode the cache sequence axis takes the spare
+    axes instead (flash-decode with cross-shard softmax reduction).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import ssm as S
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return "/".join(parts)
+
+
+def batch_axes(mesh, batch: int) -> Tuple[str, ...]:
+    """Largest prefix of (pod, data) whose size divides the batch."""
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    for k in range(len(axes), -1, -1):
+        cand = tuple(axes[:k])
+        size = math.prod(mesh.shape[a] for a in cand) if cand else 1
+        if batch % size == 0:
+            return cand
+    return ()
+
+
+def seq_axes(mesh, batch: int) -> Tuple[str, ...]:
+    """Axes left for the cache sequence dim after batch sharding."""
+    used = set(batch_axes(mesh, batch))
+    return tuple(a for a in ("pod", "data", "model") if a in mesh.shape
+                 and a not in used)
+
+
+def _axes_or_none(axes: Tuple[str, ...]):
+    return axes if axes else None
+
+
+# ----------------------------------------------------------------- params --
+
+def param_specs(cfg: ArchConfig, mesh, params_tree, *,
+                fsdp: bool = True) -> Dict:
+    """PartitionSpec pytree matching params (pass eval_shape output).
+
+    2D "FSDP x TP" sharding: every large matrix shards its parallel
+    dimension (heads / d_ff / experts / vocab) over "model" and its
+    other big dimension (usually d_model) over "data" — so parameter +
+    optimizer memory scales with the FULL chip count, while the "model"
+    axis still carries the tensor/expert-parallel compute layout (XLA
+    inserts the per-layer all-gathers, i.e. ZeRO-3 semantics).
+    """
+    msize = mesh.shape["model"]
+    dsize = mesh.shape["data"]
+    a = cfg.attn
+
+    def divides(n: int) -> bool:
+        return n > 0 and n % msize == 0
+
+    def _fsdp(n: int):
+        """'data' if FSDP is on and the dim divides the data axis."""
+        return "data" if (fsdp and n % dsize == 0) else None
+
+    def spec2(shape, model_pos, data_pos):
+        nd = len(shape)
+        dims = [None] * nd
+        if model_pos is not None:
+            dims[model_pos] = "model"
+        if data_pos is not None:
+            dims[data_pos] = _fsdp(shape[data_pos])
+        return P(*dims)
+
+    def rule(path, leaf):
+        s = _path_str(path)
+        sh = leaf.shape
+        nd = len(sh)
+        if s.endswith("embed"):
+            if cfg.family == "audio":
+                return spec2(sh, 1, 2)            # (K, V, d)
+            return spec2(sh, 0, 1)                # (V, d)
+        if s.endswith("lm_head"):
+            return spec2(sh, nd - 1, nd - 2)      # (..., d, V)
+        if "/attn/" in s:
+            if s.endswith("wq"):
+                return spec2(sh, nd - 1 if divides(a.num_heads) else None,
+                             nd - 2)
+            if s.endswith("wk") or s.endswith("wv"):
+                return spec2(sh,
+                             nd - 1 if divides(a.num_kv_heads) else None,
+                             nd - 2)
+            if s.endswith("wo"):
+                return spec2(sh, nd - 2 if divides(a.num_heads) else None,
+                             nd - 1)
+            return P()                            # q_norm / k_norm
+        if "/moe/" in s:
+            if s.endswith("wg"):
+                return P()                        # router replicated
+            if s[-3:] in ("ws1", "ws3"):
+                return spec2(sh, nd - 1, nd - 2)
+            if s.endswith("ws2"):
+                return spec2(sh, nd - 2, nd - 1)
+            # expert weights (L, E, d, f) / (L, E, f, d): experts over
+            # "model" (the paper's EP groups), d_ff over "data" (FSDP)
+            fpos = nd - 1 if s.endswith("w1") or s.endswith("w3") \
+                else nd - 2
+            return P(*[("model" if j == nd - 3 else
+                        ("data" if fsdp and j == fpos
+                         and sh[fpos] % dsize == 0
+                         else None)) for j in range(nd)])
+        if "/mlp/" in s:
+            mp = (nd - 1) if not s.endswith("w2") else (nd - 2)
+            op = (nd - 2) if not s.endswith("w2") else (nd - 1)
+            return spec2(sh, mp if divides(cfg.d_ff) else None, op)
+        if "/ssm/" in s:
+            if s.endswith("in_z") or s.endswith("in_x"):
+                return spec2(sh, nd - 1, nd - 2)
+            if s.endswith("in_dt"):
+                d_inner = cfg.ssm.expand * cfg.d_model
+                nh = d_inner // cfg.ssm.head_dim
+                return spec2(sh, nd - 1 if divides(nh) else None, nd - 2)
+            if s.endswith("in_B") or s.endswith("in_C"):
+                return spec2(sh, None, nd - 2)
+            if s.endswith("conv_x_w") or s.endswith("conv_x_b") \
+                    or s.endswith("norm_w"):
+                return P(*([None] * (nd - 1) + ["model"]))
+            if s.endswith("out_proj"):
+                return spec2(sh, nd - 2, nd - 1)
+            return P()                            # conv_B/C, A/D/dt_bias
+        return P()                                # norms, biases
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+def opt_specs(pspecs) -> Tuple:
+    """AdamWState(step, mu, nu) specs mirroring param specs."""
+    from repro.optim.adamw import AdamWState
+    return AdamWState(step=P(), mu=pspecs,
+                      nu=jax.tree_util.tree_map(lambda s: s, pspecs))
+
+
+# ------------------------------------------------------------------ cache --
+
+def cache_specs(cfg: ArchConfig, mesh, batch: int) -> Dict:
+    ba = _axes_or_none(batch_axes(mesh, batch))
+    sa = _axes_or_none(seq_axes(mesh, batch))
+    if batch > 1:
+        sa = "model" if "model" in mesh.shape else None
+    specs: Dict = {"cur_len": P()}
+    msize = mesh.shape.get("model", 1)
+
+    def kv_spec():
+        # prefer HEAD sharding when kv_heads divides the model axis:
+        # attention stays fully shard-local (no distributed softmax, no
+        # scatter into a sharded sequence dim); fall back to sequence
+        # sharding for small-kv GQA/MQA caches.
+        if cfg.attn and cfg.attn.num_kv_heads % msize == 0 and batch > 1:
+            return P(None, ba, None, "model", None)
+        return P(None, ba, sa, None, None)
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        specs["kv_k"] = kv_spec()
+        specs["kv_v"] = kv_spec()
+    if cfg.family in ("ssm", "hybrid"):
+        msize = mesh.shape["model"]
+        _, nh, _ = S.dims(cfg.ssm, cfg.d_model)
+        head_ax = "model" if nh % msize == 0 else None
+        specs["conv_x"] = P(None, ba, None, "model")
+        specs["conv_B"] = P(None, ba, None, None)
+        specs["conv_C"] = P(None, ba, None, None)
+        specs["state"] = P(None, ba, head_ax, None, None)
+    if cfg.family == "hybrid":
+        specs["shared_k"] = kv_spec()
+        specs["shared_v"] = kv_spec()
+    return specs
+
+
+# ------------------------------------------------------------- activations --
+
+def token_spec(cfg: ArchConfig, mesh, batch: int) -> P:
+    ba = _axes_or_none(batch_axes(mesh, batch))
+    if cfg.family == "audio":
+        return P(ba, None, None)
+    return P(ba, None)
+
+
+def logits_spec(cfg: ArchConfig, mesh, batch: int, *, with_seq: bool) -> P:
+    ba = _axes_or_none(batch_axes(mesh, batch))
+    dims = [ba] + ([None] if with_seq else [])
+    if cfg.family == "audio":
+        dims.append(None)                         # codebook axis
+    dims.append("model")                          # padded vocab
+    return P(*dims)
+
+
+def prefix_spec(cfg: ArchConfig, mesh, batch: int) -> P:
+    ba = _axes_or_none(batch_axes(mesh, batch))
+    return P(ba, None, None)
+
+
+def named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

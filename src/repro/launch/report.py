@@ -1,0 +1,70 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from
+dryrun_results.json.
+
+    PYTHONPATH=src python -m repro.launch.report dryrun_results.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_e(x: float) -> str:
+    return f"{x:.2e}"
+
+
+def dryrun_table(records) -> str:
+    lines = [
+        "| arch | shape | mesh | policy | peak GB (xla-cpu) | analytic "
+        "state GB | FLOPs/dev | bytes/dev | coll bytes/dev | "
+        "collectives | compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"],
+                                            r["mesh"])):
+        an = r.get("analytic", {})
+        an_s = " + ".join(f"{k[:-3]}={v}" for k, v in an.items())
+        colls = ",".join(f"{k.split('-')[0] if '-' not in k else k}:"
+                         f"{v/1e6:.0f}M"
+                         for k, v in r.get("collectives", {}).items())
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['policy']} "
+            f"| {r['peak_hbm_gb']:.2f} | {an_s} "
+            f"| {fmt_e(r['flops_per_device'])} "
+            f"| {fmt_e(r['bytes_per_device'])} "
+            f"| {fmt_e(r['collective_bytes_per_device'])} "
+            f"| {colls} | {r['compile_s']} |")
+    return "\n".join(lines)
+
+
+def roofline_table(records) -> str:
+    """Single-pod roofline: 3 terms, dominant, MODEL_FLOPS ratio."""
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | "
+        "dominant | MODEL_FLOPS | HLO FLOPs (global) | useful ratio |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != "16x16":
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {fmt_e(r['compute_s'])} | {fmt_e(r['memory_s'])} "
+            f"| {fmt_e(r['collective_s'])} | **{r['dominant']}** "
+            f"| {fmt_e(r.get('model_flops', 0))} "
+            f"| {fmt_e(r.get('hlo_flops_global', 0))} "
+            f"| {r.get('useful_ratio', 0):.3f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    records = json.load(open(path))
+    print("## Dry-run records\n")
+    print(dryrun_table(records))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(records))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Training step + launcher.
+
+`make_train_step` builds the jit-able (params, opt, tokens) -> step
+function used both by the multi-pod dry-run (lower/compile only) and by
+the runnable small-scale CLI below (CPU, reduced configs):
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-moe-1b-a400m \
+        --reduced --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, XSharePolicy
+from repro.models import init_params, loss_fn
+from repro.models.moe import OFF
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, \
+    cosine_schedule
+
+
+def make_train_step(cfg: ArchConfig, *, policy: XSharePolicy = OFF,
+                    lr=None, remat: bool = True,
+                    capacity_factor: float = 1.25,
+                    weight_decay: float = 0.1, clip: float = 1.0,
+                    accum_steps: int = 1):
+    """fwd+bwd+AdamW step. accum_steps > 1 scans microbatches with f32
+    gradient accumulation — activation memory scales with the microbatch
+    while the optimizer sees the full global batch (required to fit the
+    235B-class train shapes on 16GB/chip)."""
+    lr = lr or cosine_schedule(3e-4, 100, 10000)
+
+    def grad_of(p, tokens, prefix_embeds):
+        def lf(p):
+            loss, aux = loss_fn(cfg, p, tokens,
+                                prefix_embeds=prefix_embeds,
+                                policy=policy, remat=remat,
+                                capacity_factor=capacity_factor)
+            return loss, aux
+        (loss, _), grads = jax.value_and_grad(lf, has_aux=True)(p)
+        return loss, grads
+
+    def train_step(params, opt_state, tokens, prefix_embeds=None):
+        if accum_steps == 1:
+            loss, grads = grad_of(params, tokens, prefix_embeds)
+        else:
+            B = tokens.shape[0]
+            assert B % accum_steps == 0, (B, accum_steps)
+            mb = B // accum_steps
+            tok_mb = tokens.reshape((accum_steps, mb) + tokens.shape[1:])
+            pe_mb = None
+            if prefix_embeds is not None:
+                pe_mb = prefix_embeds.reshape(
+                    (accum_steps, mb) + prefix_embeds.shape[1:])
+
+            def micro(carry, xs):
+                g_acc, l_acc = carry
+                t = xs[0]
+                pe = xs[1] if pe_mb is not None else None
+                loss, g = grad_of(params, t, pe)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + jnp.asarray(b, jnp.float32),
+                    g_acc, g)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            xs = (tok_mb,) if pe_mb is None else (tok_mb, pe_mb)
+            (g_acc, l_acc), _ = jax.lax.scan(micro, (g0, jnp.zeros(())),
+                                             xs)
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps,
+                                           g_acc)
+            loss = l_acc / accum_steps
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        params, opt_state = adamw_update(grads, opt_state, params, lr=lr,
+                                         weight_decay=weight_decay)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def main(argv: Optional[list] = None) -> None:
+    from repro.configs.registry import get_config
+    from repro.data import SyntheticLM, batches
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", type=str, default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    opt = adamw_init(params)
+    step_fn = jax.jit(make_train_step(
+        cfg, lr=cosine_schedule(args.lr, 10, args.steps), remat=False))
+
+    lm = SyntheticLM(cfg.vocab_size, name=args.arch)
+    stream = batches(lm, batch=args.batch, seq_len=args.seq,
+                     seed=args.seed,
+                     num_codebooks=(cfg.num_codebooks
+                                    if cfg.family == "audio" else 1))
+    prefix = None
+    if cfg.prefix_len:
+        prefix = jax.random.normal(
+            key, (args.batch, cfg.prefix_len, cfg.d_model))
+
+    t0 = time.perf_counter()
+    for step in range(args.steps):
+        tokens = jnp.asarray(next(stream))
+        params, opt, m = step_fn(params, opt, tokens, prefix)
+        if step % max(1, args.steps // 10) == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(m['loss']):.4f} "
+                  f"gnorm {float(m['grad_norm']):.3f}")
+    dt = time.perf_counter() - t0
+    print(f"done: {args.steps} steps in {dt:.1f}s "
+          f"({args.steps * args.batch * args.seq / dt:.0f} tok/s)")
+    if args.ckpt:
+        from repro.checkpoint import save_checkpoint
+        save_checkpoint(args.ckpt, params, step=args.steps)
+        print("saved", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.model import (  # noqa: F401
+    init_params, forward, loss_fn, prefill, decode_step, init_cache,
+    param_count, lm_head_apply, embed_tokens,
+)

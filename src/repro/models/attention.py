@@ -1,0 +1,363 @@
+"""Attention: GQA + RoPE, chunked (flash-style) full-sequence attention for
+train/prefill, and cache-based attention for decode / speculative verify.
+
+Full-sequence attention is a double lax.scan over (q-chunk, kv-chunk) with
+online softmax, so peak memory is O(S * chunk) instead of O(S^2) — required
+for the 32k prefill shape. Decode attention scores one (or a few verify)
+tokens against a full or rolling-window KV cache; with the cache sequence
+axis sharded over the mesh "model" axis, XLA SPMD turns the softmax
+normalizer into a cross-shard reduction (flash-decode).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnConfig
+from repro.models.layers import dense_init, rms_norm
+
+_NEG = -1e30
+
+
+# ----------------------------------------------------------------- RoPE ---
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (B, S, H, dh), positions: (B, S) or (S,) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = jnp.asarray(x1, jnp.float32), jnp.asarray(x2, jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- params ---
+
+def init_attn(key, attn: AttnConfig, d_model: int, dtype,
+              stack: Optional[int] = None) -> Dict:
+    pre = () if stack is None else (stack,)
+    ks = jax.random.split(key, 4)
+    H, Hkv, dh = attn.num_heads, attn.num_kv_heads, attn.head_dim
+    p = {
+        "wq": dense_init(ks[0], pre + (d_model, H * dh), dtype),
+        "wk": dense_init(ks[1], pre + (d_model, Hkv * dh), dtype),
+        "wv": dense_init(ks[2], pre + (d_model, Hkv * dh), dtype),
+        "wo": dense_init(ks[3], pre + (H * dh, d_model), dtype),
+    }
+    if attn.qk_norm:
+        p["q_norm"] = jnp.ones(pre + (dh,), dtype)
+        p["k_norm"] = jnp.ones(pre + (dh,), dtype)
+    return p
+
+
+def qkv_project(p: Dict, x: jnp.ndarray, positions: jnp.ndarray,
+                attn: AttnConfig, eps: float = 1e-6
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> q (B,S,H,dh), k/v (B,S,Hkv,dh), rope applied."""
+    B, S, _ = x.shape
+    H, Hkv, dh = attn.num_heads, attn.num_kv_heads, attn.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, dh)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, dh)
+    if attn.qk_norm:
+        q = rms_norm(q, p["q_norm"], eps)
+        k = rms_norm(k, p["k_norm"], eps)
+    q = apply_rope(q, positions, attn.rope_theta)
+    k = apply_rope(k, positions, attn.rope_theta)
+    return q, k, v
+
+
+# ------------------------------------------------- full-seq (prefill) -----
+#
+# Chunked (flash) attention with a CUSTOM VJP: the backward pass
+# recomputes the per-block probability matrix from (q, k, lse) instead of
+# letting autodiff save every scan iteration's residuals — without this,
+# the 4k-train / 32k-prefill shapes store O(S^2 / chunk) per layer and
+# blow past HBM.
+
+
+def _block_mask(row, col, S: int, causal: bool, window: Optional[int]):
+    mask = col[None, :] < S                       # drop kv padding
+    if causal:
+        mask = mask & (col[None, :] <= row[:, None])
+    if window is not None:
+        mask = mask & (col[None, :] > row[:, None] - window)
+    return mask
+
+
+def _flash_fwd(q, k, v, *, causal, window, q_chunk, kv_chunk, true_s):
+    """Returns (out (B,S,H,dh), lse (B,H,S)) — padded inputs."""
+    B, Sp, H, dh = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    nq, nk = Sp // q_chunk, Sk // kv_chunk
+    S = true_s
+
+    qs = q.reshape(B, nq, q_chunk, H, dh).transpose(1, 0, 2, 3, 4)
+    ks = k.reshape(B, nk, kv_chunk, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kv_chunk, Hkv, dh).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi):
+        qb, i = qi
+        qbf = jnp.asarray(qb, jnp.float32)
+        row = i * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kb, vb, j = kj
+            col = j * kv_chunk + jnp.arange(kv_chunk)
+            kbf = jnp.repeat(jnp.asarray(kb, jnp.float32), rep, axis=2)
+            vbf = jnp.repeat(jnp.asarray(vb, jnp.float32), rep, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qbf, kbf) * scale
+            mask = _block_mask(row, col, S, causal, window)
+            maskf = mask.astype(jnp.float32)
+            s = jnp.where(mask[None, None], s, _NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None]) * maskf[None, None]
+            alpha = jnp.exp(m - m_new)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vbf)
+            l = l * alpha + p.sum(axis=-1)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, H, q_chunk), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (ks, vs, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))      # (B,H,qc)
+        return None, (out.transpose(0, 2, 1, 3), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (qs, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, dh)
+    lse = lses.transpose(1, 2, 0, 3).reshape(B, H, Sp)
+    return out.astype(q.dtype), lse
+
+
+def _flash_bwd(q, k, v, out, lse, g, *, causal, window, q_chunk, kv_chunk,
+               true_s):
+    """Blockwise flash-attention backward (recompute p from lse)."""
+    B, Sp, H, dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    nq, nk = Sp // q_chunk, Sk // kv_chunk
+    S = true_s
+
+    f32 = jnp.float32
+    D = jnp.einsum("bshd,bshd->bhs", jnp.asarray(g, f32),
+                   jnp.asarray(out, f32))            # (B,H,Sp)
+
+    qs = q.reshape(B, nq, q_chunk, H, dh).transpose(1, 0, 2, 3, 4)
+    gs = g.reshape(B, nq, q_chunk, H, dh).transpose(1, 0, 2, 3, 4)
+    ls = lse.reshape(B, H, nq, q_chunk).transpose(2, 0, 1, 3)
+    Ds = D.reshape(B, H, nq, q_chunk).transpose(2, 0, 1, 3)
+    ks = k.reshape(B, nk, kv_chunk, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kv_chunk, Hkv, dh).transpose(1, 0, 2, 3, 4)
+
+    def q_step(carry, qi):
+        dk_full, dv_full = carry                     # (B,Sk,Hkv,dh) f32
+        qb, gb, lse_b, D_b, i = qi
+        qbf = jnp.asarray(qb, f32)
+        gbf = jnp.asarray(gb, f32)
+        row = i * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry2, kj):
+            dq_blk, dk_full, dv_full = carry2
+            kb, vb, j = kj
+            col = j * kv_chunk + jnp.arange(kv_chunk)
+            kbf = jnp.repeat(jnp.asarray(kb, f32), rep, axis=2)
+            vbf = jnp.repeat(jnp.asarray(vb, f32), rep, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qbf, kbf) * scale
+            mask = _block_mask(row, col, S, causal, window)
+            p = jnp.exp(s - lse_b[..., None]) * \
+                mask[None, None].astype(f32)          # (B,H,q,k)
+            dp = jnp.einsum("bqhd,bkhd->bhqk", gbf, vbf)
+            ds = p * (dp - D_b[..., None]) * scale    # (B,H,q,k)
+            dq_blk += jnp.einsum("bhqk,bkhd->bqhd", ds, kbf)
+            dv_b = jnp.einsum("bhqk,bqhd->bkhd", p, gbf)
+            dk_b = jnp.einsum("bhqk,bqhd->bkhd", ds, qbf)
+            # fold grouped heads back to kv heads
+            dv_b = dv_b.reshape(B, kv_chunk, Hkv, rep, dh).sum(3)
+            dk_b = dk_b.reshape(B, kv_chunk, Hkv, rep, dh).sum(3)
+            dk_full = jax.lax.dynamic_update_slice(
+                dk_full, jax.lax.dynamic_slice(
+                    dk_full, (0, j * kv_chunk, 0, 0),
+                    (B, kv_chunk, Hkv, dh)) + dk_b,
+                (0, j * kv_chunk, 0, 0))
+            dv_full = jax.lax.dynamic_update_slice(
+                dv_full, jax.lax.dynamic_slice(
+                    dv_full, (0, j * kv_chunk, 0, 0),
+                    (B, kv_chunk, Hkv, dh)) + dv_b,
+                (0, j * kv_chunk, 0, 0))
+            return (dq_blk, dk_full, dv_full), None
+
+        dq0 = jnp.zeros((B, q_chunk, H, dh), f32)
+        (dq_blk, dk_full, dv_full), _ = jax.lax.scan(
+            kv_step, (dq0, dk_full, dv_full), (ks, vs, jnp.arange(nk)))
+        return (dk_full, dv_full), dq_blk
+
+    dk0 = jnp.zeros((B, Sk, Hkv, dh), f32)
+    dv0 = jnp.zeros((B, Sk, Hkv, dh), f32)
+    (dk, dv), dqs = jax.lax.scan(
+        q_step, (dk0, dv0), (qs, gs, ls, Ds, jnp.arange(nq)))
+    dq = dqs.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, dh)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_fn(causal: bool, window: Optional[int], q_chunk: int,
+              kv_chunk: int, true_s: int):
+    @jax.custom_vjp
+    def f(q, k, v):
+        out, _ = _flash_fwd(q, k, v, causal=causal, window=window,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk,
+                            true_s=true_s)
+        return out
+
+    def fwd(q, k, v):
+        out, lse = _flash_fwd(q, k, v, causal=causal, window=window,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk,
+                              true_s=true_s)
+        return out, (q, k, v, out, lse)
+
+    def bwd(res, g):
+        q, k, v, out, lse = res
+        return _flash_bwd(q, k, v, out, lse, g, causal=causal,
+                          window=window, q_chunk=q_chunk,
+                          kv_chunk=kv_chunk, true_s=true_s)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_chunk: int = 512, kv_chunk: int = 512) -> jnp.ndarray:
+    """Chunked causal attention with online softmax and O(S*chunk)
+    memory in both directions (custom VJP).
+
+    q: (B, S, H, dh); k, v: (B, S, Hkv, dh) with H % Hkv == 0.
+    window: sliding-window width (attend to the last `window` positions,
+    inclusive of self). Returns (B, S, H, dh).
+    """
+    B, S, H, dh = q.shape
+    qc = min(q_chunk, S)
+    kc = min(kv_chunk, S)
+    Sp = ((S + qc - 1) // qc) * qc
+    Sk = ((S + kc - 1) // kc) * kc
+    if Sp != S:
+        q = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    if Sk != S:
+        k = jnp.pad(k, ((0, 0), (0, Sk - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sk - S), (0, 0), (0, 0)))
+    fn = _flash_fn(causal, window, qc, kc, S)
+    out = fn(q, k, v)
+    return out[:, :S]
+
+
+# ------------------------------------------------------- cache (decode) ---
+
+def cached_attention(q: jnp.ndarray, cache_k: jnp.ndarray,
+                     cache_v: jnp.ndarray, cur_len: jnp.ndarray, *,
+                     window: Optional[int] = None,
+                     start_pos: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Score new tokens against an (already updated) KV cache.
+
+    q: (B, T, H, dh) — T new tokens whose k/v were written at positions
+    [cur_len, cur_len+T). cache_k/v: (B, C, Hkv, dh). cur_len may be a
+    scalar or a per-row (B,) vector (ragged speculative acceptance).
+    For a full cache, slot c holds position c; for a rolling window cache
+    (C >= window + spec margin), slot c holds the latest position
+    p < cur_len+T with p % C == c. Returns (B, T, H, dh).
+    """
+    B, T, H, dh = q.shape
+    C, Hkv = cache_k.shape[1], cache_k.shape[2]
+    rep = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    # grouped-query einsums against the cache IN ITS STORED DTYPE, dot
+    # output in the same dtype (softmax is still f32): an explicit
+    # preferred_element_type=f32 here makes XLA materialize a convert of
+    # the whole (stacked, loop-hoisted) cache to f32 — doubling decode
+    # HBM residency. bf16 score rounding is the standard serving
+    # trade-off; unit tests run the whole path in f32.
+    ck = cache_k
+    cv = cache_v
+    if ck.dtype.itemsize < 2:          # quantized (f8) cache: dequant
+        ck = ck.astype(jnp.bfloat16)   # per-use (on TPU: per VMEM block)
+        cv = cv.astype(jnp.bfloat16)
+    qg = q.reshape(B, T, Hkv, rep, dh).astype(ck.dtype)
+    s = jnp.einsum("btgrd,bcgd->bgrtc", qg, ck)
+    s = jnp.asarray(s, jnp.float32).reshape(B, H, T, C) * scale
+    slot = jnp.arange(C)[None, None, :]                  # (1,1,C)
+    cur = jnp.asarray(cur_len)
+    cur_b = jnp.broadcast_to(cur.reshape(-1, 1), (B, 1)) if cur.ndim \
+        else jnp.full((B, 1), cur)
+    q_pos = (cur_b + jnp.arange(T)[None, :])[..., None]  # (B,T,1)
+    if window is None:
+        slot_pos = jnp.broadcast_to(slot, (B, T, C))
+    else:
+        # latest position written to each slot, per query token
+        slot_pos = q_pos - ((q_pos - slot) % C)
+    mask = slot_pos <= q_pos
+    mask = mask & (slot_pos >= 0)
+    if window is not None:
+        mask = mask & (slot_pos > q_pos - window)
+    if start_pos is not None:
+        mask = mask & (slot_pos >= start_pos)
+    maskf = mask.astype(jnp.float32)
+    s = jnp.where(mask[:, None], s, _NEG)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m) * maskf[:, None]
+    pg = p.reshape(B, Hkv, rep, T, C).astype(cv.dtype)
+    out = jnp.einsum("bgrtc,bcgd->btgrd", pg, cv)
+    out = jnp.asarray(out, jnp.float32).reshape(B, T, H, dh)
+    denom = p.sum(axis=-1)[..., None].transpose(0, 2, 1, 3)
+    out = out / jnp.maximum(denom, 1e-30)
+    return out.astype(q.dtype)
+
+
+def update_cache(cache: jnp.ndarray, new: jnp.ndarray, cur_len: jnp.ndarray,
+                 *, window: Optional[int] = None) -> jnp.ndarray:
+    """Write T new per-token kv rows at positions [cur_len, cur_len+T).
+
+    cache: (B, C, Hkv, dh); new: (B, T, Hkv, dh). Rolling-window caches
+    wrap modulo C; full caches assume cur_len+T <= C. cur_len may be a
+    scalar or per-row (B,).
+
+    Implemented as a select against slot-index masks rather than a
+    scatter: a dynamic scatter into the (sharded) cache sequence axis
+    forces SPMD to replicate the whole cache ("involuntary full
+    rematerialization"); the where-form is purely elementwise and keeps
+    the cache sharded in place.
+    """
+    B, T = new.shape[0], new.shape[1]
+    C = cache.shape[1]
+    cur = jnp.asarray(cur_len)
+    cur_b = jnp.broadcast_to(cur.reshape(-1, 1), (B, 1)) if cur.ndim \
+        else jnp.full((B, 1), cur)
+    slot = jnp.arange(C)[None, :]                        # (1, C)
+    out = cache
+    newc = new.astype(cache.dtype)
+    for i in range(T):                                   # T is small/static
+        pos = cur_b + i                                  # (B, 1)
+        if window is not None:
+            pos = pos % C
+        hit = (slot == pos)[:, :, None, None]            # (B, C, 1, 1)
+        out = jnp.where(hit, newc[:, i:i + 1], out)
+    return out

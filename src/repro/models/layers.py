@@ -1,0 +1,66 @@
+"""Basic neural blocks: norms, MLPs, embeddings. Pure functional, params
+are plain dict pytrees; stacked-layer leaves carry a leading (L, ...) axis
+consumed by lax.scan in model.py."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """RMSNorm in f32, cast back to input dtype."""
+    dtype = x.dtype
+    xf = jnp.asarray(x, jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * jnp.asarray(weight, jnp.float32)
+    return out.astype(dtype)
+
+
+def dense_init(key, shape, dtype, scale: float = 0.02) -> jnp.ndarray:
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype, act: str,
+             stack: int | None = None) -> Dict:
+    """SwiGLU (w1,w3,w2) or GELU (w1,w2) MLP params; optionally stacked."""
+    pre = () if stack is None else (stack,)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w1": dense_init(k1, pre + (d_model, d_ff), dtype),
+        "w2": dense_init(k2, pre + (d_ff, d_model), dtype),
+    }
+    if act == "swiglu":
+        p["w3"] = dense_init(k3, pre + (d_model, d_ff), dtype)
+    return p
+
+
+def mlp_apply(params: Dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    """x: (..., d). Megatron-style: hidden dim is the sharded axis."""
+    h = x @ params["w1"]
+    if act == "swiglu":
+        h = jax.nn.silu(h) * (x @ params["w3"])
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(act)
+    return h @ params["w2"]
+
+
+def embed_lookup(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """table: (V, d); tokens int32 (...,) -> (..., d)."""
+    return jnp.take(table, tokens, axis=0)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean next-token CE. logits (..., V) f-any, labels int32 (...,)."""
+    logits = jnp.asarray(logits, jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = jnp.asarray(mask, jnp.float32)
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

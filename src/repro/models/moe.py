@@ -1,0 +1,157 @@
+"""Mixture-of-Experts FFN layer with XShare batch-aware selection as a
+first-class routing policy.
+
+Expert compute uses GShard-style capacity-based dense dispatch/combine
+einsums: with the expert axis sharded over the mesh "model" axis this
+lowers to all-to-all (token-sharded -> expert-sharded -> token-sharded),
+i.e. real expert parallelism. The paper's algorithms plug in between the
+router softmax and the dispatch: they shrink the *set* of experts any
+token may route to, which on the EP mesh bounds the per-shard load
+(Alg 5/6) and in the Pallas serving kernel skips inactive experts'
+HBM->VMEM weight streaming entirely (kernels/moe_ffn.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig, XSharePolicy
+from repro.core import metrics as M
+from repro.core import selection
+from repro.core.routing import topk_route
+from repro.models.layers import dense_init, mlp_apply
+from repro.sharding import constrain
+
+OFF = XSharePolicy(mode="off")
+
+
+def init_moe(key, moe: MoEConfig, d_model: int, dtype,
+             stack: Optional[int] = None) -> Dict:
+    pre = () if stack is None else (stack,)
+    ks = jax.random.split(key, 7)
+    E, f = moe.num_experts, moe.d_ff_expert
+    p = {
+        "wg": dense_init(ks[0], pre + (d_model, E), jnp.float32),
+        "w1": dense_init(ks[1], pre + (E, d_model, f), dtype),
+        "w3": dense_init(ks[2], pre + (E, d_model, f), dtype),
+        "w2": dense_init(ks[3], pre + (E, f, d_model), dtype),
+    }
+    if moe.num_shared_experts:
+        fs = moe.d_ff_shared * moe.num_shared_experts
+        p["ws1"] = dense_init(ks[4], pre + (d_model, fs), dtype)
+        p["ws3"] = dense_init(ks[5], pre + (d_model, fs), dtype)
+        p["ws2"] = dense_init(ks[6], pre + (fs, d_model), dtype)
+    return p
+
+
+def route(p: Dict, x: jnp.ndarray, moe: MoEConfig, policy: XSharePolicy,
+          spec_shape: Optional[Tuple[int, int]] = None):
+    """Router + XShare selection. x: (T, d).
+
+    Returns (idx (T,k), weights (T,k), aux dict of selection metrics).
+    """
+    logits = jnp.asarray(x, jnp.float32) @ jnp.asarray(p["wg"], jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if policy.mode == "off":
+        idx, w = topk_route(logits, moe.top_k, normalize=moe.normalize_gates)
+        mask = jnp.ones((moe.num_experts,), bool)
+    else:
+        idx, w, mask = selection.apply_policy(
+            probs, policy, top_k=moe.top_k, spec_shape=spec_shape,
+            logits=logits)
+    one_hot = jax.nn.one_hot(idx, moe.num_experts, dtype=w.dtype)
+    combine = (one_hot * w[..., None]).sum(axis=-2)       # (T, E)
+    active = (combine > 0).any(axis=0)
+    G = policy.num_groups if moe.num_experts % policy.num_groups == 0 else 1
+    # Switch-Transformer load-balance auxiliary: E * sum_e f_e * P_e
+    # (f_e = fraction of tokens routed to e, P_e = mean router prob).
+    # Real MoEs train with this — without it the router collapses and
+    # the batch-activation statistics the paper studies never appear.
+    frac = (one_hot.sum(-2) > 0).astype(jnp.float32).mean(0)   # (E,)
+    lb = moe.num_experts * (frac * probs.mean(0)).sum() / moe.top_k
+    aux = {
+        "activated_experts": active.sum(),
+        "selected_set": mask.sum(),
+        "max_group_load": M.max_group_load(active, G),
+        "gate_mass": M.gate_mass_captured(probs, mask),
+        "lb_loss": lb,
+    }
+    return idx, w, aux
+
+
+def expert_ffn(p: Dict, x: jnp.ndarray, idx: jnp.ndarray, w: jnp.ndarray,
+               moe: MoEConfig, *, capacity_factor: float = 1.25,
+               min_capacity: int = 4,
+               capacity: Optional[int] = None,
+               group_size: int = 2048) -> jnp.ndarray:
+    """GShard capacity-based dispatch -> per-expert FFN -> weighted combine.
+
+    x: (T, d); idx/w: (T, k). Tokens are processed in G groups of
+    t <= group_size (G the largest divisor of T meeting that), each group
+    getting capacity C = max(min_capacity, ceil(t*k/E * capacity_factor)):
+    the (G, t, E, C) dispatch one-hots stay bounded at production token
+    counts, and with groups sharded over the data axes and experts over
+    "model" the dispatch/combine einsums lower to all-to-all (expert
+    parallelism). Tokens beyond an expert's per-group capacity are
+    dropped (standard GShard semantics); pass capacity=t for exact,
+    drop-free computation (accuracy benchmarks; requires G == 1 to be
+    truly global).
+    """
+    T, d = x.shape
+    E, k = moe.num_experts, idx.shape[-1]
+    G = 1
+    if T > group_size:
+        for cand in range(T // group_size, 0, -1):
+            if T % cand == 0 and T // cand <= group_size:
+                G = cand
+                break
+    t = T // G
+    if capacity is None:
+        C = max(min_capacity, int(-(-t * k * capacity_factor // E)))
+        C = min(C, t)
+    else:
+        C = min(capacity, t)
+
+    xg = x.reshape(G, t, d)
+    one_hot = jax.nn.one_hot(idx.reshape(G, t, k), E, dtype=jnp.float32)
+    gate = (one_hot * w.reshape(G, t, k)[..., None].astype(jnp.float32)
+            ).sum(-2)                                      # (G,t,E)
+    routed = one_hot.sum(-2)                               # (G,t,E) 0/1
+    # position of token within its expert's per-group buffer
+    pos = jnp.cumsum(routed, axis=1) - routed              # (G,t,E)
+    keep = routed * (pos < C)
+    disp = keep[..., None] * jax.nn.one_hot(pos, C, dtype=jnp.float32)
+    disp = constrain(disp, "batch", None, "model", None)   # (G,t,E,C)
+    xe = jnp.einsum("gtec,gtd->gecd", disp, jnp.asarray(xg, jnp.float32))
+    xe = constrain(xe.astype(x.dtype), "batch", "model", None, None)
+    h = jnp.einsum("gecd,edf->gecf", xe, p["w1"])
+    h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", xe, p["w3"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w2"])          # (G,E,C,d)
+    ye = constrain(ye, "batch", "model", None, None)
+    comb = disp * gate[..., None]                          # (G,t,E,C)
+    y = jnp.einsum("gtec,gecd->gtd", comb, jnp.asarray(ye, jnp.float32))
+    y = constrain(y, "batch", None, None)
+    return y.reshape(T, d).astype(x.dtype)
+
+
+def moe_apply(p: Dict, x: jnp.ndarray, moe: MoEConfig,
+              policy: XSharePolicy = OFF, *,
+              spec_shape: Optional[Tuple[int, int]] = None,
+              capacity_factor: float = 1.25,
+              capacity: Optional[int] = None):
+    """Full MoE layer. x: (..., d) (leading dims flattened internally).
+
+    Returns (y, aux). Shared experts (DeepSeek-style) are added
+    unconditionally — they are outside the selection problem (Sec 2.1).
+    """
+    shape = x.shape
+    xt = x.reshape(-1, shape[-1])
+    idx, w, aux = route(p, xt, moe, policy, spec_shape)
+    y = expert_ffn(p, xt, idx, w, moe, capacity_factor=capacity_factor,
+                   capacity=capacity)
+    if "ws1" in p:
+        y = y + mlp_apply({"w1": p["ws1"], "w3": p["ws3"], "w2": p["ws2"]},
+                          xt, "swiglu")
+    return y.reshape(shape), aux

@@ -1,0 +1,252 @@
+"""Mamba2 (SSD — state-space duality) block. [arXiv:2405.21060]
+
+Full-sequence processing uses the chunked SSD algorithm: intra-chunk
+"attention-like" masked matmuls plus an inter-chunk state scan, giving
+O(S * chunk) memory and matmul-dominated compute (MXU-friendly — this is
+the TPU adaptation of the paper's CUDA scan). Decode is the O(1) SSM
+recurrence over a (conv states, ssm_state) cache.
+
+Projections are stored as separate matrices (z / x / B / C / dt) rather
+than one fused in_proj: under tensor parallelism each output then shards
+cleanly on its own axis (d_inner or group-state), with no cross-shard
+slicing of a concatenated dimension — the fused layout would force a
+resharding collective in every layer.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import dense_init, rms_norm
+
+
+def dims(ssm: SSMConfig, d_model: int):
+    d_inner = ssm.expand * d_model
+    n_heads = d_inner // ssm.head_dim
+    d_bc = ssm.n_groups * ssm.d_state
+    return d_inner, n_heads, d_bc
+
+
+def init_ssm(key, ssm: SSMConfig, d_model: int, dtype,
+             stack: Optional[int] = None) -> Dict:
+    d_inner, n_heads, d_bc = dims(ssm, d_model)
+    pre = () if stack is None else (stack,)
+    ks = jax.random.split(key, 9)
+    K = ssm.d_conv
+    return {
+        "in_z": dense_init(ks[0], pre + (d_model, d_inner), dtype),
+        "in_x": dense_init(ks[1], pre + (d_model, d_inner), dtype),
+        "in_B": dense_init(ks[2], pre + (d_model, d_bc), dtype),
+        "in_C": dense_init(ks[3], pre + (d_model, d_bc), dtype),
+        "in_dt": dense_init(ks[4], pre + (d_model, n_heads), dtype),
+        "conv_x_w": dense_init(ks[5], pre + (K, d_inner), dtype, scale=0.1),
+        "conv_x_b": jnp.zeros(pre + (d_inner,), dtype),
+        "conv_B_w": dense_init(ks[6], pre + (K, d_bc), dtype, scale=0.1),
+        "conv_B_b": jnp.zeros(pre + (d_bc,), dtype),
+        "conv_C_w": dense_init(ks[7], pre + (K, d_bc), dtype, scale=0.1),
+        "conv_C_b": jnp.zeros(pre + (d_bc,), dtype),
+        "A_log": jnp.zeros(pre + (n_heads,), jnp.float32),   # A = -1
+        "D": jnp.ones(pre + (n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros(pre + (n_heads,), jnp.float32),
+        "norm_w": jnp.ones(pre + (d_inner,), dtype),
+        "out_proj": dense_init(ks[8], pre + (d_inner, d_model), dtype),
+    }
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 init_state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv1d + SiLU. u: (B,S,C), w: (K,C).
+
+    init_state: (B, K-1, C) trailing pre-conv context from a previous
+    segment (None = zeros, i.e. sequence start).
+    """
+    K = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros(u.shape[:1] + (K - 1,) + u.shape[2:], u.dtype)
+    else:
+        pad = init_state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1]] * w[i] for i in range(K)) + b
+    return jax.nn.silu(out)
+
+
+def _conv_tail(u: jnp.ndarray, K: int,
+               init_state: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Last K-1 pre-conv inputs (next segment's init_state)."""
+    B = u.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((B, K - 1) + u.shape[2:], u.dtype)
+    else:
+        pad = init_state.astype(u.dtype)
+    return jnp.concatenate([pad, u], axis=1)[:, -(K - 1):]
+
+
+def ssd_chunked(xh: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                init_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.
+
+    xh: (B,S,nh,hd) inputs; dt: (B,S,nh) post-softplus step sizes;
+    A: (nh,) negative decay rates; Bm/Cm: (B,S,g,ds) input/output
+    projections (g groups broadcast over heads).
+    Returns y (B,S,nh,hd) and final state (B,nh,hd,ds).
+    """
+    Bsz, S, nh, hd = xh.shape
+    g, ds = Bm.shape[2], Bm.shape[3]
+    rep = nh // g
+    l = min(chunk, S)
+    Sp = ((S + l - 1) // l) * l
+    if Sp != S:
+        xh = jnp.pad(xh, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, Sp - S), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    nc = Sp // l
+
+    f32 = jnp.float32
+    x = jnp.asarray(xh, f32).reshape(Bsz, nc, l, nh, hd)
+    dt = jnp.asarray(dt, f32).reshape(Bsz, nc, l, nh)
+    Bh = jnp.repeat(jnp.asarray(Bm, f32).reshape(Bsz, nc, l, g, ds),
+                    rep, axis=3)                     # (B,nc,l,nh,ds)
+    Ch = jnp.repeat(jnp.asarray(Cm, f32).reshape(Bsz, nc, l, g, ds),
+                    rep, axis=3)
+    dA = dt * A[None, None, None, :]                 # (B,nc,l,nh) <= 0
+    cum = jnp.cumsum(dA, axis=2)                     # within-chunk cumsum
+
+    # ---- intra-chunk (block-diagonal) term --------------------------------
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,i,j,nh)
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcihs,bcjhs->bcijh", Ch, Bh)     # (B,nc,i,j,nh)
+    M = scores * decay * dt[:, :, None, :, :]             # fold dt_j
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", M, x)
+
+    # ---- chunk states ------------------------------------------------------
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)       # (B,nc,l,nh)
+    states = jnp.einsum("bclhs,bclh,bclhp->bchps",
+                        Bh, decay_states * dt, x)         # (B,nc,nh,hd,ds)
+
+    # ---- inter-chunk recurrence -------------------------------------------
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (B,nc,nh)
+    s0 = jnp.zeros((Bsz, nh, hd, ds), f32) if init_state is None \
+        else jnp.asarray(init_state, f32)
+
+    def step(prev, inp):
+        st, dec = inp                                     # (B,nh,hd,ds),(B,nh)
+        new = prev * dec[:, :, None, None] + st
+        return new, prev                                  # emit entering state
+
+    final, entering = jax.lax.scan(
+        step, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    entering = entering.transpose(1, 0, 2, 3, 4)          # (B,nc,nh,hd,ds)
+
+    # ---- inter-chunk contribution -----------------------------------------
+    state_decay = jnp.exp(cum)                            # decay 0..i
+    y_off = jnp.einsum("bcihs,bchps,bcih->bcihp",
+                       Ch, entering, state_decay)
+    y = (y_diag + y_off).reshape(Bsz, Sp, nh, hd)[:, :S]
+    return y.astype(xh.dtype), final
+
+
+def ssm_forward(p: Dict, x: jnp.ndarray, ssm: SSMConfig, d_model: int,
+                eps: float, *,
+                init_conv: Optional[Tuple] = None,
+                init_state: Optional[jnp.ndarray] = None,
+                use_kernel: bool = False):
+    """Full-sequence Mamba2 block. x: (B,S,d) -> (y (B,S,d), cache).
+
+    cache = ((conv_x, conv_B, conv_C) pre-conv tails, ssm_state).
+    """
+    Bsz, S, _ = x.shape
+    d_inner, nh, d_bc = dims(ssm, d_model)
+    K = ssm.d_conv
+    z = x @ p["in_z"]
+    xr = x @ p["in_x"]
+    Br = x @ p["in_B"]
+    Cr = x @ p["in_C"]
+    dt_raw = x @ p["in_dt"]
+    ic = init_conv or (None, None, None)
+    xc = _causal_conv(xr, p["conv_x_w"], p["conv_x_b"], ic[0])
+    Bc = _causal_conv(Br, p["conv_B_w"], p["conv_B_b"], ic[1])
+    Cc = _causal_conv(Cr, p["conv_C_w"], p["conv_C_b"], ic[2])
+    xh = xc.reshape(Bsz, S, nh, ssm.head_dim)
+    # keep the SSD intra-chunk intermediates (decay/score blocks carry an
+    # nh axis) sharded over "model" — without this the (B,nc,l,l,nh)
+    # tensors replicate and dominate HBM at 32k prefill
+    from repro.sharding import constrain
+    xh = constrain(xh, "batch", None, "model", None)
+    Bm = Bc.reshape(Bsz, S, ssm.n_groups, ssm.d_state)
+    Cm = Cc.reshape(Bsz, S, ssm.n_groups, ssm.d_state)
+    dt = jax.nn.softplus(jnp.asarray(dt_raw, jnp.float32) + p["dt_bias"])
+    dt = constrain(dt, "batch", None, "model")
+    A = -jnp.exp(p["A_log"])
+    if use_kernel:
+        from repro.kernels.ops import ssd_chunk_scan
+        assert init_state is None, "kernel path starts from zero state"
+        rep = nh // ssm.n_groups
+        y, final_state = ssd_chunk_scan(
+            xh, dt, A, jnp.repeat(Bm, rep, 2), jnp.repeat(Cm, rep, 2),
+            chunk=ssm.chunk_size)
+    else:
+        y, final_state = ssd_chunked(xh, dt, A, Bm, Cm, ssm.chunk_size,
+                                     init_state)
+    y = y + (p["D"][None, None, :, None] * jnp.asarray(xh, jnp.float32)
+             ).astype(y.dtype)
+    y = y.reshape(Bsz, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], eps)
+    out = y @ p["out_proj"]
+    conv_cache = (_conv_tail(xr, K, ic[0]), _conv_tail(Br, K, ic[1]),
+                  _conv_tail(Cr, K, ic[2]))
+    return out, (conv_cache, final_state)
+
+
+def ssm_decode(p: Dict, x_t: jnp.ndarray, cache, ssm: SSMConfig,
+               d_model: int, eps: float):
+    """Single-token recurrence. x_t: (B, d);
+    cache = ((conv_x, conv_B, conv_C), ssm_state)."""
+    (cx, cB, cC), ssm_state = cache
+    Bsz = x_t.shape[0]
+    d_inner, nh, d_bc = dims(ssm, d_model)
+    z = x_t @ p["in_z"]
+    xr = x_t @ p["in_x"]
+    Br = x_t @ p["in_B"]
+    Cr = x_t @ p["in_C"]
+    dt_raw = x_t @ p["in_dt"]
+
+    def conv1(state, new, w, b):
+        win = jnp.concatenate([state, new[:, None].astype(state.dtype)],
+                              axis=1)                     # (B,K,C)
+        out = jax.nn.silu(jnp.einsum(
+            "bkc,kc->bc", jnp.asarray(win, jnp.float32),
+            jnp.asarray(w, jnp.float32)) + b).astype(x_t.dtype)
+        return out, win[:, 1:]
+
+    xc, cx = conv1(cx, xr, p["conv_x_w"], p["conv_x_b"])
+    Bc, cB = conv1(cB, Br, p["conv_B_w"], p["conv_B_b"])
+    Cc, cC = conv1(cC, Cr, p["conv_C_w"], p["conv_C_b"])
+
+    xh = jnp.asarray(xc.reshape(Bsz, nh, ssm.head_dim), jnp.float32)
+    rep = nh // ssm.n_groups
+    Bm = jnp.repeat(jnp.asarray(
+        Bc.reshape(Bsz, ssm.n_groups, ssm.d_state), jnp.float32),
+        rep, axis=1)                                      # (B,nh,ds)
+    Cm = jnp.repeat(jnp.asarray(
+        Cc.reshape(Bsz, ssm.n_groups, ssm.d_state), jnp.float32),
+        rep, axis=1)
+    dt = jax.nn.softplus(jnp.asarray(dt_raw, jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                  # (B,nh)
+    new_state = (jnp.asarray(ssm_state, jnp.float32)
+                 * dA[:, :, None, None]
+                 + jnp.einsum("bh,bhp,bhs->bhps", dt, xh, Bm))
+    y = jnp.einsum("bhs,bhps->bhp", Cm, new_state)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(Bsz, d_inner).astype(x_t.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], eps)
+    out = y @ p["out_proj"]
+    return out, ((cx, cB, cC), new_state.astype(ssm_state.dtype))

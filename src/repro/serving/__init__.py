@@ -1,0 +1,3 @@
+from repro.serving.engine import Engine, GenStats  # noqa: F401
+from repro.serving.spec_decode import greedy_accept, SpecResult  # noqa: F401
+from repro.serving import sampler  # noqa: F401

@@ -1,0 +1,198 @@
+"""Batched serving engine: prefill -> decode loop, optional speculative
+decoding (draft model + ragged per-request acceptance), XShare routing
+policies applied per decode/verify step, OTPS accounting.
+
+All requests advance in lockstep steps (static shapes for jit); ragged
+speculative acceptance is handled with per-row cache cur_len vectors, so
+each request's cache stays exact while the batch stays rectangular —
+the same structure vLLM-style engines use for batched verification.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, XSharePolicy
+from repro.models import decode_step, prefill
+from repro.models.moe import OFF
+from repro.serving.sampler import greedy, sample
+from repro.serving.spec_decode import greedy_accept
+
+
+@dataclass
+class GenStats:
+    prompt_len: int = 0
+    steps: int = 0
+    new_tokens: int = 0
+    wall_s: float = 0.0
+    accepted_hist: List[int] = field(default_factory=list)
+    layer_aux: List[Dict] = field(default_factory=list)
+
+    @property
+    def otps(self) -> float:
+        return self.new_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def mean_accepted(self) -> float:
+        return float(np.mean(self.accepted_hist)) if self.accepted_hist \
+            else 0.0
+
+    def mean_aux(self, key: str) -> float:
+        vals = [float(np.mean(a[key])) for a in self.layer_aux if key in a]
+        return float(np.mean(vals)) if vals else float("nan")
+
+
+class Engine:
+    """Serving engine for one model (+ optional draft model)."""
+
+    def __init__(self, cfg: ArchConfig, params, *,
+                 policy: XSharePolicy = OFF,
+                 cache_len: int = 512,
+                 force_window: Optional[int] = None,
+                 capacity_factor: float = 8.0,
+                 draft: Optional[Tuple[ArchConfig, dict]] = None,
+                 spec_len: int = 0,
+                 temperature: float = 0.0,
+                 seed: int = 0):
+        self.cfg, self.params = cfg, params
+        self.policy = policy
+        self.spec_len = spec_len
+        self.temperature = temperature
+        self.cache_len = cache_len
+        self._key = jax.random.PRNGKey(seed)
+        if spec_len and cfg.family == "audio":
+            raise NotImplementedError("spec decode for codebook streams")
+        if spec_len and not draft:
+            raise ValueError("spec_len > 0 requires a draft model")
+        self.draft = draft
+
+        cf = capacity_factor
+        self._prefill = jax.jit(lambda p, t: prefill(
+            cfg, p, t, cache_len=cache_len, policy=OFF,
+            force_window=force_window, capacity_factor=cf))
+        self._decode = jax.jit(lambda p, t, c: decode_step(
+            cfg, p, t, c, policy=policy, force_window=force_window,
+            capacity_factor=cf))
+        spec_policy = policy if policy.mode in ("off", "spec") else OFF
+        self._verify = jax.jit(lambda p, t, c: decode_step(
+            cfg, p, t, c, policy=spec_policy,
+            spec_shape=(t.shape[0], t.shape[1]),
+            force_window=force_window, capacity_factor=cf))
+        if draft:
+            dcfg, _ = draft
+            self._dprefill = jax.jit(lambda p, t: prefill(
+                dcfg, p, t, cache_len=cache_len, capacity_factor=cf))
+            self._ddecode = jax.jit(lambda p, t, c: decode_step(
+                dcfg, p, t, c, capacity_factor=cf))
+
+    # ------------------------------------------------------------------ --
+
+    def _pick(self, logits: jnp.ndarray) -> jnp.ndarray:
+        if self.temperature == 0.0:
+            return greedy(logits)
+        self._key, k = jax.random.split(self._key)
+        return sample(logits, k, temperature=self.temperature)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 *, prefix_embeds=None) -> Tuple[np.ndarray, GenStats]:
+        """prompts: (B, S) int32 ((B,S,K) audio). Returns
+        (tokens (B, <=max_new_tokens[, K]), stats). Greedy unless
+        temperature > 0."""
+        if self.spec_len:
+            return self._generate_spec(prompts, max_new_tokens)
+        return self._generate_plain(prompts, max_new_tokens,
+                                    prefix_embeds=prefix_embeds)
+
+    # ------------------------------------------------------------ plain --
+
+    def _generate_plain(self, prompts, max_new_tokens, *, prefix_embeds):
+        stats = GenStats(prompt_len=prompts.shape[1])
+        t0 = time.perf_counter()
+        if prefix_embeds is not None:
+            lg, cache, _ = jax.jit(
+                lambda p, t, pe: prefill(
+                    self.cfg, p, t, cache_len=self.cache_len,
+                    prefix_embeds=pe))(self.params, prompts, prefix_embeds)
+        else:
+            lg, cache, _ = self._prefill(self.params, prompts)
+        tok = self._pick(lg)                                # (B,) or (B,K)
+        outs = [np.asarray(tok)]
+        for _ in range(max_new_tokens - 1):
+            t_in = tok[:, None]                             # (B,1[,K])
+            lg, cache, aux = self._decode(self.params, t_in, cache)
+            tok = self._pick(lg[:, -1])
+            outs.append(np.asarray(tok))
+            stats.steps += 1
+            if aux:
+                stats.layer_aux.append(
+                    {k: np.asarray(v) for k, v in aux.items()})
+        toks = np.stack(outs, axis=1)
+        stats.new_tokens = int(np.prod(toks.shape))  # audio: K per frame
+        stats.wall_s = time.perf_counter() - t0
+        return toks, stats
+
+    # ------------------------------------------------------------- spec --
+
+    def _generate_spec(self, prompts, max_new_tokens):
+        dcfg, dparams = self.draft
+        B, S = prompts.shape
+        Ls = self.spec_len
+        stats = GenStats(prompt_len=S)
+        t0 = time.perf_counter()
+
+        lg, cache, _ = self._prefill(self.params, prompts)
+        _, dcache, _ = self._dprefill(dparams, prompts)
+        cur = jnp.full((B,), S, jnp.int32)
+        cache["cur_len"] = cur
+        dcache["cur_len"] = cur
+        x0 = greedy(lg)                                     # (B,)
+        out_tok: List[List[int]] = [[int(x0[b])] for b in range(B)]
+
+        while min(len(o) for o in out_tok) < max_new_tokens:
+            # -- draft Ls tokens (one extra step writes the last kv) -------
+            drafts = []
+            dtok = x0
+            for i in range(Ls + 1):
+                dlg, dcache, _ = self._ddecode(dparams, dtok[:, None],
+                                               dcache)
+                dtok = greedy(dlg[:, -1])
+                if i < Ls:
+                    drafts.append(dtok)
+            drafts = jnp.stack(drafts, axis=1)              # (B, Ls)
+
+            # -- verify on the target (the paper's amplified batch) --------
+            verify_in = jnp.concatenate([x0[:, None], drafts], axis=1)
+            old_cur = cache["cur_len"]
+            vlg, cache, aux = self._verify(self.params, verify_in, cache)
+            res = greedy_accept(vlg, drafts)
+
+            # -- ragged rollback -------------------------------------------
+            new_cur = old_cur + res.num_new
+            cache["cur_len"] = new_cur
+            dcache["cur_len"] = new_cur
+            x0 = jnp.take_along_axis(res.new_tokens,
+                                     res.accepted[:, None], axis=1)[:, 0]
+            nt = np.asarray(res.new_tokens)
+            nn = np.asarray(res.num_new)
+            for b in range(B):
+                out_tok[b].extend(int(t) for t in nt[b, :nn[b]])
+            stats.steps += 1
+            stats.accepted_hist.append(float(np.mean(np.asarray(
+                res.accepted))))
+            if aux:
+                stats.layer_aux.append(
+                    {k: np.asarray(v) for k, v in aux.items()})
+
+        stats.new_tokens = sum(min(len(o), max_new_tokens)
+                               for o in out_tok)
+        stats.wall_s = time.perf_counter() - t0
+        toks = np.full((B, max_new_tokens), -1, np.int32)
+        for b in range(B):
+            row = out_tok[b][:max_new_tokens]
+            toks[b, :len(row)] = row
+        return toks, stats

@@ -1,0 +1,25 @@
+"""Token sampling from model logits."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jnp.ndarray) -> jnp.ndarray:
+    """argmax over the vocab axis. (..., V) -> (...,) int32."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(logits: jnp.ndarray, key, *, temperature: float = 1.0,
+           top_p: float = 1.0) -> jnp.ndarray:
+    if temperature == 0.0:
+        return greedy(logits)
+    logits = jnp.asarray(logits, jnp.float32) / temperature
+    if top_p < 1.0:
+        sorted_l = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_l, axis=-1)
+        csum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(csum < top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_l, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,47 @@
+"""Speculative decoding: draft-then-verify with per-request (ragged)
+acceptance, greedy matching (EAGLE-style chains verify the same way under
+greedy sampling — the draft here is a small autoregressive model).
+
+Verification feeds the target model (1 + L_s) tokens per request —
+exactly the batch-shape amplification the paper targets — and routes the
+MoE layers with XSharePolicy(mode="spec") so Algorithm 4's hierarchical
+per-request selection sees the (b, 1+L_s, E) gate structure.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SpecResult(NamedTuple):
+    accepted: jnp.ndarray     # (B,) number of accepted draft tokens
+    new_tokens: jnp.ndarray   # (B, L_s+1) accepted drafts + bonus, padded
+    num_new: jnp.ndarray      # (B,) == accepted + 1
+
+
+def greedy_accept(verify_logits: jnp.ndarray,
+                  drafts: jnp.ndarray) -> SpecResult:
+    """verify_logits: (B, 1+L_s, V) target logits for inputs
+    [x0, d_1..d_Ls]; drafts: (B, L_s).
+
+    Position i's logits predict the token after [x0, d_1..d_i], so draft
+    d_{i+1} is accepted iff it equals argmax(logits[:, i]) and every
+    earlier draft was accepted. One bonus token (the target's own pick at
+    the first mismatch / after the last draft) is always emitted.
+    """
+    B, T, _ = verify_logits.shape
+    Ls = T - 1
+    t_hat = jnp.argmax(verify_logits, axis=-1).astype(jnp.int32)  # (B,1+Ls)
+    match = drafts == t_hat[:, :Ls]                               # (B,Ls)
+    accepted = jnp.cumprod(match.astype(jnp.int32), axis=1).sum(axis=1)
+    bonus = jnp.take_along_axis(t_hat, accepted[:, None], axis=1)[:, 0]
+    # new_tokens[b] = d_1..d_n, bonus, (padding = bonus repeats, masked by
+    # num_new downstream)
+    pos = jnp.arange(Ls + 1)[None, :]
+    from_draft = pos < accepted[:, None]
+    padded_drafts = jnp.pad(drafts, ((0, 0), (0, 1)))
+    new_tokens = jnp.where(from_draft, padded_drafts, bonus[:, None])
+    return SpecResult(accepted=accepted, new_tokens=new_tokens,
+                      num_new=accepted + 1)

@@ -1,0 +1,56 @@
+"""Activation-sharding constraints usable from model code without
+threading mesh handles everywhere.
+
+Model code calls ``constrain(x, "batch", None, "model", ...)``; under a
+configured mesh context (launch/dryrun/train) this becomes
+``with_sharding_constraint`` with "batch" resolved to the configured
+data axes tuple; outside any context (CPU unit tests) it is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = {"mesh": None, "batch_axes": (), "disabled": frozenset()}
+
+
+@contextlib.contextmanager
+def mesh_context(mesh, batch_axes: Tuple[str, ...],
+                 disable: Tuple[str, ...] = ()):
+    old = dict(_STATE)
+    _STATE["mesh"] = mesh
+    _STATE["batch_axes"] = tuple(batch_axes)
+    _STATE["disabled"] = frozenset(disable)
+    try:
+        yield
+    finally:
+        _STATE.update(old)
+
+
+def current_mesh():
+    return _STATE["mesh"]
+
+
+def batch_axes() -> Tuple[str, ...]:
+    return _STATE["batch_axes"]
+
+
+def constrain(x, *axes: Optional[str], tag: Optional[str] = None):
+    """axes entries: None, "model", or "batch" (mapped to the configured
+    data-parallel axes tuple). Tagged constraints can be disabled per
+    mesh_context (perf experiments, e.g. tag="seqpar")."""
+    mesh = _STATE["mesh"]
+    if mesh is None or (tag and tag in _STATE["disabled"]):
+        return x
+    resolved = []
+    for a in axes:
+        if a == "batch":
+            ba = _STATE["batch_axes"]
+            resolved.append(ba if ba else None)
+        else:
+            resolved.append(a)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))

@@ -1,0 +1,7 @@
+"""Test config. NOTE: no XLA_FLAGS device-count forcing here — smoke
+tests and benches must see the real (single-device) platform; only
+launch/dryrun.py forces 512 host devices, and the small-mesh integration
+test does so in a subprocess."""
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,129 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret
+mode (kernel bodies execute in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import flash_decode, ssd_chunk_scan, xshare_moe_ffn
+from repro.kernels.ref import decode_attn_ref, moe_ffn_ref, ssd_chunk_ref
+
+
+def tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ----------------------------------------------------------- moe_ffn ------
+
+@pytest.mark.parametrize("T,d,E,f,blockf", [
+    (8, 64, 4, 128, 64), (16, 128, 8, 256, 128), (4, 32, 16, 64, 64),
+    (32, 128, 6, 96, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_ffn_kernel_matches_ref(T, d, E, f, blockf, dtype):
+    key = jax.random.PRNGKey(T + E)
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (T, d), dtype)
+    w1 = (jax.random.normal(ks[1], (E, d, f)) * 0.05).astype(dtype)
+    w3 = (jax.random.normal(ks[2], (E, d, f)) * 0.05).astype(dtype)
+    w2 = (jax.random.normal(ks[3], (E, f, d)) * 0.05).astype(dtype)
+    logits = jax.random.normal(ks[4], (T, E))
+    top, idx = jax.lax.top_k(logits, 2)
+    w = jax.nn.softmax(top, -1)
+    combine = (jax.nn.one_hot(idx, E) * w[..., None]).sum(-2)
+    n_act = max(1, E // 2)
+    active = jnp.zeros(E, bool).at[
+        jax.random.permutation(ks[5], E)[:n_act]].set(True)
+    combine = jnp.where(active[None], combine, 0.0).astype(jnp.float32)
+    ref = moe_ffn_ref(x, w1, w3, w2, combine, active)
+    out = xshare_moe_ffn(x, w1, w3, w2, combine, active,
+                         max_active=n_act + 1, block_f=blockf)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol(dtype), rtol=tol(dtype))
+
+
+def test_moe_ffn_all_inactive_is_zero():
+    T, d, E, f = 4, 32, 4, 64
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (T, d))
+    w1 = jax.random.normal(key, (E, d, f))
+    w3 = jax.random.normal(key, (E, d, f))
+    w2 = jax.random.normal(key, (E, f, d))
+    combine = jnp.zeros((T, E))
+    active = jnp.zeros(E, bool)
+    out = xshare_moe_ffn(x, w1, w3, w2, combine, active, max_active=2,
+                         block_f=64)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+# ------------------------------------------------------- decode_attn ------
+
+@pytest.mark.parametrize("B,H,Hkv,dh,S,bs", [
+    (2, 8, 2, 64, 256, 64), (3, 4, 4, 32, 100, 32),
+    (1, 16, 2, 128, 1024, 256), (2, 4, 1, 64, 64, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_ref(B, H, Hkv, dh, S, bs, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(B * S), 4)
+    q = jax.random.normal(ks[0], (B, H, dh), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, dh), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, dh), dtype)
+    lengths = jax.random.randint(ks[3], (B,), 1, S + 1)
+    out = flash_decode(q, k, v, lengths, block_s=bs)
+    ref = decode_attn_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol(dtype), rtol=tol(dtype))
+
+
+def test_decode_attention_length_masking():
+    """Tokens beyond the length must not influence the output."""
+    B, H, Hkv, dh, S = 1, 4, 2, 32, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, dh))
+    k = jax.random.normal(ks[1], (B, S, Hkv, dh))
+    v = jax.random.normal(ks[2], (B, S, Hkv, dh))
+    lengths = jnp.array([17])
+    out1 = flash_decode(q, k, v, lengths, block_s=16)
+    k2 = k.at[:, 17:].set(99.0)
+    v2 = v.at[:, 17:].set(-99.0)
+    out2 = flash_decode(q, k2, v2, lengths, block_s=16)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               atol=1e-6)
+
+
+# ----------------------------------------------------------- ssd_scan -----
+
+@pytest.mark.parametrize("B,S,nh,hd,ds,chunk,bh", [
+    (2, 64, 4, 32, 16, 16, 2), (1, 100, 8, 64, 32, 32, 8),
+    (2, 256, 2, 64, 128, 128, 2), (1, 48, 4, 32, 64, 64, 4),
+])
+def test_ssd_scan_matches_sequential_ref(B, S, nh, hd, ds, chunk, bh):
+    ks = jax.random.split(jax.random.PRNGKey(S), 5)
+    x = jax.random.normal(ks[0], (B, S, nh, hd)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, nh, ds)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, nh, ds)) * 0.3
+    y, st = ssd_chunk_scan(x, dt, A, Bm, Cm, chunk=chunk, block_h=bh)
+    yr, sr = ssd_chunk_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sr),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_scan_bf16_inputs():
+    B, S, nh, hd, ds = 1, 64, 2, 32, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = (jax.random.normal(ks[0], (B, S, nh, hd)) * 0.5).astype(jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    Bm = (jax.random.normal(ks[3], (B, S, nh, ds)) * 0.3).astype(jnp.bfloat16)
+    Cm = (jax.random.normal(ks[4], (B, S, nh, ds)) * 0.3).astype(jnp.bfloat16)
+    y, st = ssd_chunk_scan(x, dt, A, Bm, Cm, chunk=32, block_h=2)
+    yr, sr = ssd_chunk_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=5e-2,
+                               rtol=5e-2)

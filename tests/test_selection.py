@@ -1,0 +1,181 @@
+"""Property tests for the XShare selection algorithms (paper Sec 3-5).
+
+The central theoretical claim (Prop 3.2 / Cor 3.3): the per-layer proxy
+objective is modular, so greedy == exhaustive optimum. We verify that
+literally against brute force on small instances, plus the structural
+invariants of every algorithm.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import XSharePolicy
+from repro.core import (batch_select, ep_select, greedy_select,
+                        per_request_select, restricted_topk, spec_select,
+                        topk_mask, warmup_union)
+from repro.core.metrics import (expected_activated, gate_mass_captured,
+                                max_group_load, topk_overlap)
+from repro.core.selection import apply_policy
+
+
+def rand_gates(seed, T, E):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (T, E))
+    return np.asarray(jax.nn.softmax(logits, axis=-1))
+
+
+# ---------------------------------------------------------- optimality ----
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), T=st.integers(1, 6),
+       E=st.integers(2, 8), m=st.integers(0, 8))
+def test_greedy_matches_bruteforce_modular_optimum(seed, T, E, m):
+    """Cor 3.3: top-m by aggregated score == exhaustive max of f(S),
+    |S| <= m (no warm-up)."""
+    g = rand_gates(seed, T, E)
+    sel = np.asarray(greedy_select(jnp.asarray(g), m))
+    got = g.sum(0)[sel].sum()
+    best = 0.0
+    mm = min(m, E)
+    for combo in itertools.combinations(range(E), mm):
+        best = max(best, g.sum(0)[list(combo)].sum())
+    assert got >= best - 1e-6
+    assert sel.sum() == min(m, E)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), T=st.integers(1, 6),
+       E=st.integers(4, 10), m=st.integers(0, 6), k0=st.integers(0, 2))
+def test_warmup_always_included_and_budget_respected(seed, T, E, m, k0):
+    g = jnp.asarray(rand_gates(seed, T, E))
+    s0 = warmup_union(g, k0)
+    sel = batch_select(g, m, k0)
+    assert bool(jnp.all(sel | ~s0)), "warm-up experts must stay selected"
+    assert int(sel.sum()) <= int(s0.sum()) + m
+    if m == 0:
+        assert bool(jnp.all(sel == s0))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), T=st.integers(2, 8),
+       E=st.integers(4, 12), m=st.integers(1, 6))
+def test_batch_select_token_permutation_invariant(seed, T, E, m):
+    g = rand_gates(seed, T, E)
+    perm = np.random.default_rng(seed).permutation(T)
+    a = np.asarray(batch_select(jnp.asarray(g), m, 1))
+    b = np.asarray(batch_select(jnp.asarray(g[perm]), m, 1))
+    assert (a == b).all()
+
+
+# ------------------------------------------------------------------- EP ---
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), T=st.integers(1, 6),
+       G=st.sampled_from([2, 4]), per=st.sampled_from([2, 4]),
+       m_g=st.integers(1, 4), k0=st.integers(0, 2))
+def test_ep_select_respects_max_load(seed, T, G, per, m_g, k0):
+    """Alg 5/6: MaxLoad(S) <= m_g by construction (strict cap)."""
+    E = G * per
+    g = jnp.asarray(rand_gates(seed, T, E))
+    sel = ep_select(g, m_g, G, k0, strict_cap=True)
+    assert int(max_group_load(sel, G)) <= m_g
+    # warm-up experts get priority within each group
+    s0 = np.asarray(warmup_union(g, k0))
+    selected = np.asarray(sel)
+    agg = np.asarray(g.sum(0))
+    for grp in range(G):
+        lo, hi = grp * per, (grp + 1) * per
+        w_in = s0[lo:hi]
+        if w_in.sum() <= m_g:
+            assert (selected[lo:hi] | ~w_in).all()
+
+
+def test_ep_select_balances_against_plain_greedy():
+    """Concentrated scores: plain greedy overloads one group; EP-aware
+    selection caps it (the Table 2 mechanism)."""
+    E, G, m = 32, 8, 4
+    rng = np.random.default_rng(0)
+    g = rng.random((16, E)) * 0.01
+    g[:, :4] += 10.0                      # all mass on group 0 (4 experts)
+    g = jnp.asarray(g / g.sum(-1, keepdims=True))
+    plain = greedy_select(g, m)
+    ep = ep_select(g, 1, G, 0, strict_cap=True)
+    assert int(max_group_load(plain, G)) == 4   # greedy saturates group 0
+    assert int(max_group_load(ep, G)) <= 1
+
+
+# ------------------------------------------------------------ spec mode ---
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), b=st.integers(1, 4),
+       t=st.integers(1, 4), E=st.integers(4, 10),
+       m_r=st.integers(0, 4), m=st.integers(0, 4))
+def test_spec_select_contains_per_request_sets(seed, b, t, E, m_r, m):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (b, t, E))
+    g = jax.nn.softmax(logits, -1)
+    s_r = per_request_select(g, m_r, 1)
+    s = spec_select(g, m, m_r, 1)
+    assert bool(jnp.all(s | ~s_r.any(0)))
+    assert int(s.sum()) <= int(s_r.any(0).sum()) + m
+
+
+# ----------------------------------------------------------- refinement ---
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), T=st.integers(1, 6),
+       E=st.integers(4, 12), k=st.integers(1, 4), m=st.integers(1, 8))
+def test_refinement_routes_within_selected_set(seed, T, E, k, m):
+    g = jnp.asarray(rand_gates(seed, T, E))
+    mask = batch_select(g, m, 1)
+    idx, w = restricted_topk(g, mask, k)
+    sel = np.asarray(mask)
+    for tok in range(T):
+        for slot in range(min(k, E)):
+            if float(w[tok, slot]) > 0:
+                assert sel[int(idx[tok, slot])]
+    sums = np.asarray(w.sum(-1))
+    assert np.all((np.abs(sums - 1.0) < 1e-5) | (sums == 0.0))
+
+
+def test_apply_policy_off_equals_full_mask():
+    g = jnp.asarray(rand_gates(0, 8, 16))
+    idx, w, mask = apply_policy(g, XSharePolicy(mode="off"), top_k=4)
+    assert int(mask.sum()) == 16
+    # off == plain top-k
+    ref_idx = jax.lax.top_k(g, 4)[1]
+    assert (np.asarray(idx) == np.asarray(ref_idx)).all()
+
+
+# --------------------------------------------------------------- metrics --
+
+def test_expected_activated_matches_monte_carlo():
+    """Fig 1's closed form E[N_a] = N(1-(1-k/N)^B) vs simulation with
+    uniform-random independent routing."""
+    N, k, B = 64, 4, 16
+    rng = np.random.default_rng(0)
+    trials = []
+    for _ in range(300):
+        active = set()
+        for _ in range(B):
+            active |= set(rng.choice(N, size=k, replace=False))
+        trials.append(len(active))
+    mc = float(np.mean(trials))
+    formula = expected_activated(N, k, B)
+    assert abs(mc - formula) / formula < 0.05
+
+
+def test_gate_mass_and_overlap():
+    g = jnp.asarray(rand_gates(3, 4, 8))
+    full = gate_mass_captured(g, jnp.ones(8, bool))
+    assert abs(float(full) - 1.0) < 1e-6
+    half = gate_mass_captured(g, jnp.arange(8) < 4)
+    assert 0.0 < float(half) < 1.0
+    ov = topk_overlap(jnp.array([[0, 1, 2]]), jnp.array([[1, 2, 3]]), 8)
+    assert int(ov[0]) == 2
+
+
+def test_topk_mask_zero_k():
+    assert not bool(topk_mask(jnp.ones((3, 5)), 0).any())

@@ -1,0 +1,105 @@
+"""Serving engine: speculative decoding MUST equal plain greedy decoding
+(the fundamental lossless-speculation invariant), ragged acceptance,
+policy accounting, heterogeneous batches."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import XSharePolicy
+from repro.configs.registry import ARCHS
+from repro.models import init_params
+from repro.serving import Engine, greedy_accept
+
+
+def small(name, **kw):
+    return ARCHS[name].reduced(num_layers=2, max_d_model=128,
+                               max_vocab=256, **kw)
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = small("granite-moe-1b-a400m")
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(2), (3, 12), 0, cfg.vocab_size))
+    return cfg, params, prompts
+
+
+def test_spec_equals_plain_self_draft(moe_setup):
+    cfg, params, prompts = moe_setup
+    plain, _ = Engine(cfg, params, cache_len=128).generate(prompts, 20)
+    spec, st = Engine(cfg, params, cache_len=128, draft=(cfg, params),
+                      spec_len=3).generate(prompts, 20)
+    assert np.array_equal(plain, spec)
+    assert st.mean_accepted == 3.0          # identical draft: all accepted
+
+
+def test_spec_equals_plain_perturbed_draft(moe_setup):
+    cfg, params, prompts = moe_setup
+    pert = jax.tree_util.tree_map(
+        lambda a: a + 0.02 * jax.random.normal(jax.random.PRNGKey(9),
+                                               a.shape, a.dtype),
+        params)
+    plain, _ = Engine(cfg, params, cache_len=128).generate(prompts, 20)
+    spec, st = Engine(cfg, params, cache_len=128, draft=(cfg, pert),
+                      spec_len=3).generate(prompts, 20)
+    assert np.array_equal(plain, spec)
+    assert 0.0 <= st.mean_accepted <= 3.0   # ragged acceptance exercised
+
+
+def test_spec_equals_plain_window_cache():
+    cfg = small("h2o-danube-1.8b")
+    assert cfg.attn.sliding_window
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(4), (2, 10), 0, cfg.vocab_size))
+    plain, _ = Engine(cfg, params, cache_len=128).generate(prompts, 30)
+    spec, _ = Engine(cfg, params, cache_len=128, draft=(cfg, params),
+                     spec_len=4).generate(prompts, 30)
+    assert np.array_equal(plain, spec)
+
+
+def test_spec_policy_collects_expert_stats(moe_setup):
+    cfg, params, prompts = moe_setup
+    pol = XSharePolicy(mode="spec", k0=1, m_l=0, m_r=2)
+    eng = Engine(cfg, params, cache_len=128, policy=pol,
+                 draft=(cfg, params), spec_len=3)
+    toks, st = eng.generate(prompts, 16)
+    assert st.layer_aux, "MoE layer stats must be recorded"
+    assert st.mean_aux("selected_set") <= cfg.moe.num_experts
+    assert st.mean_aux("activated_experts") <= st.mean_aux("selected_set") \
+        + 1e-6
+
+
+def test_greedy_accept_unit():
+    V = 8
+    # drafts [3, 5]; target argmax [3, 2, 7] -> accept 1 draft + bonus 2
+    logits = jnp.full((1, 3, V), -10.0)
+    logits = logits.at[0, 0, 3].set(10.0).at[0, 1, 2].set(10.0) \
+                   .at[0, 2, 7].set(10.0)
+    res = greedy_accept(logits, jnp.array([[3, 5]]))
+    assert int(res.accepted[0]) == 1
+    assert int(res.num_new[0]) == 2
+    assert res.new_tokens[0, 0] == 3 and res.new_tokens[0, 1] == 2
+
+
+def test_plain_generation_audio_codebooks():
+    cfg = small("musicgen-large")
+    params = init_params(cfg, jax.random.PRNGKey(5))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(6), (2, 8, cfg.num_codebooks), 0,
+        cfg.vocab_size))
+    toks, st = Engine(cfg, params, cache_len=64).generate(prompts, 6)
+    assert toks.shape == (2, 6, cfg.num_codebooks)
+    assert st.new_tokens == 2 * 6 * cfg.num_codebooks
+
+
+def test_temperature_sampling_differs_from_greedy(moe_setup):
+    cfg, params, prompts = moe_setup
+    g, _ = Engine(cfg, params, cache_len=128).generate(prompts, 16)
+    s, _ = Engine(cfg, params, cache_len=128, temperature=1.5,
+                  seed=7).generate(prompts, 16)
+    assert not np.array_equal(g, s)

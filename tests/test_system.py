@@ -1,0 +1,111 @@
+"""End-to-end system behaviour: train a small MoE LM on synthetic data,
+then serve it under XShare policies and verify the paper's qualitative
+claims hold on this system:
+
+  1. batch-aware selection reduces activated experts vs vanilla top-k
+     (Sec 3 / Fig 1 mechanism);
+  2. eval quality degrades gracefully as the budget shrinks (Fig 4
+     trade-off structure);
+  3. hierarchical spec-mode selection (Alg 4) respects its budget
+     structure on correlated speculative tokens (Sec 4);
+  4. EP-aware selection bounds per-group load (Table 2 mechanism);
+  5. captured gate mass grows monotonically with budget (the modular
+     objective, Prop 3.2).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (ArchConfig, AttnConfig, MoEConfig,
+                                XSharePolicy)
+from repro.data import SyntheticLM, batches
+from repro.launch.train import make_train_step
+from repro.models import forward, init_params, loss_fn
+from repro.optim import adamw_init, cosine_schedule
+
+CFG = ArchConfig(
+    name="sys-moe", family="moe", num_layers=2, d_model=64, d_ff=0,
+    vocab_size=128,
+    attn=AttnConfig(num_heads=4, num_kv_heads=2, head_dim=16),
+    moe=MoEConfig(num_experts=16, top_k=4, d_ff_expert=64),
+)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(CFG, lr=cosine_schedule(3e-3, 5, 60),
+                                   remat=False, capacity_factor=4.0))
+    lm = SyntheticLM(CFG.vocab_size, name="sys", branch=4)
+    stream = batches(lm, batch=8, seq_len=64, seed=0)
+    for _ in range(60):
+        params, opt, m = step(params, opt, jnp.asarray(next(stream)))
+    eval_toks = jnp.asarray(next(batches(lm, batch=16, seq_len=64,
+                                         seed=99)))
+    return params, eval_toks
+
+
+def eval_loss(params, toks, policy):
+    return float(loss_fn(CFG, params, toks, policy=policy, remat=False,
+                         capacity_factor=16.0, lb_weight=0.0)[0])
+
+
+def layer_activation(params, toks, policy, spec_shape=None):
+    _, aux = forward(CFG, params, toks, policy=policy,
+                     spec_shape=spec_shape, capacity_factor=16.0)
+    return float(np.mean(np.asarray(aux["activated_experts"])))
+
+
+def test_batch_selection_reduces_activation(trained):
+    params, toks = trained
+    dec = toks[:, :2]
+    base = layer_activation(params, dec, XSharePolicy(mode="off"))
+    shared = layer_activation(
+        params, dec, XSharePolicy(mode="batch", k0=1, m_l=2))
+    assert shared < base, (base, shared)
+
+
+def test_quality_budget_tradeoff(trained):
+    params, toks = trained
+    base = eval_loss(params, toks, XSharePolicy(mode="off"))
+    rich = eval_loss(params, toks,
+                     XSharePolicy(mode="batch", k0=2, m_l=12))
+    poor = eval_loss(params, toks,
+                     XSharePolicy(mode="batch", k0=0, m_l=1))
+    assert rich - base < 0.2, (base, rich)
+    assert poor >= rich - 1e-6, (rich, poor)
+
+
+def test_spec_mode_budget_structure(trained):
+    params, _ = trained
+    lm = SyntheticLM(CFG.vocab_size, name="sys", branch=4)
+    reqs = jnp.asarray(lm.sample(np.random.default_rng(5), 4, 4))
+    pol = XSharePolicy(mode="spec", k0=1, m_l=0, m_r=2)
+    act = layer_activation(params, reqs, pol, spec_shape=(4, 4))
+    base = layer_activation(params, reqs, XSharePolicy(mode="off"))
+    assert act <= base
+    _, aux = forward(CFG, params, reqs, policy=pol, spec_shape=(4, 4),
+                     capacity_factor=16.0)
+    assert float(np.max(np.asarray(aux["selected_set"]))) <= 16
+
+
+def test_ep_mode_bounds_group_load(trained):
+    params, toks = trained
+    pol = XSharePolicy(mode="ep", k0=1, m_g=2, num_groups=4)
+    _, aux = forward(CFG, params, toks[:, :4], policy=pol,
+                     capacity_factor=16.0)
+    assert float(np.max(np.asarray(aux["max_group_load"]))) <= 2
+
+
+def test_gate_mass_increases_with_budget(trained):
+    params, toks = trained
+    dec = toks[:, :2]
+    masses = []
+    for m_l in (1, 4, 12):
+        _, aux = forward(CFG, params, dec,
+                         policy=XSharePolicy(mode="batch", k0=1, m_l=m_l),
+                         capacity_factor=16.0)
+        masses.append(float(np.mean(np.asarray(aux["gate_mass"]))))
+    assert masses[0] <= masses[1] <= masses[2] <= 1.0 + 1e-6

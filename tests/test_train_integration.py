@@ -1,0 +1,83 @@
+"""End-to-end training integration: the tiny-MoE LM must actually learn
+the synthetic Markov structure (loss drops), with and without XShare
+routing active at train time, and a checkpoint restores to the same loss."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (ArchConfig, AttnConfig, MoEConfig,
+                                XSharePolicy)
+from repro.data import SyntheticLM, batches
+from repro.launch.train import make_train_step
+from repro.models import init_params, loss_fn
+from repro.optim import adamw_init, cosine_schedule
+
+TINY_MOE = ArchConfig(
+    name="tiny-moe", family="moe", num_layers=2, d_model=64, d_ff=0,
+    vocab_size=128,
+    attn=AttnConfig(num_heads=4, num_kv_heads=2, head_dim=16),
+    moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64),
+)
+
+
+def run_training(steps=40, policy=XSharePolicy(mode="off")):
+    params = init_params(TINY_MOE, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step_fn = jax.jit(make_train_step(
+        TINY_MOE, policy=policy, lr=cosine_schedule(3e-3, 5, steps),
+        remat=False, capacity_factor=4.0))
+    lm = SyntheticLM(TINY_MOE.vocab_size, name="train-test", branch=4)
+    stream = batches(lm, batch=8, seq_len=64, seed=0)
+    losses = []
+    for _ in range(steps):
+        params, opt, m = step_fn(params, opt, jnp.asarray(next(stream)))
+        losses.append(float(m["loss"]))
+    return params, losses
+
+
+def test_training_reduces_loss():
+    params, losses = run_training()
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+
+
+def test_training_with_xshare_policy_stays_stable():
+    _, losses = run_training(
+        steps=20, policy=XSharePolicy(mode="batch", k0=1, m_l=2))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]
+
+
+def test_checkpoint_restores_training_state():
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    params, _ = run_training(steps=10)
+    lm = SyntheticLM(TINY_MOE.vocab_size, name="train-test", branch=4)
+    toks = jnp.asarray(next(batches(lm, batch=8, seq_len=64, seed=1)))
+    ref_loss = float(loss_fn(TINY_MOE, params, toks, remat=False)[0])
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck")
+        save_checkpoint(path, params, step=10)
+        back = restore_checkpoint(
+            path, jax.tree_util.tree_map(jnp.zeros_like, params))
+    got = float(loss_fn(TINY_MOE, back, toks, remat=False)[0])
+    assert abs(got - ref_loss) < 1e-5
+
+
+def test_remat_matches_no_remat_loss():
+    params = init_params(TINY_MOE, jax.random.PRNGKey(0))
+    lm = SyntheticLM(TINY_MOE.vocab_size, name="x", branch=4)
+    toks = jnp.asarray(next(batches(lm, batch=4, seq_len=32, seed=0)))
+    l1 = float(loss_fn(TINY_MOE, params, toks, remat=False)[0])
+    l2 = float(loss_fn(TINY_MOE, params, toks, remat=True)[0])
+    assert abs(l1 - l2) < 1e-5
+    g1 = jax.grad(lambda p: loss_fn(TINY_MOE, p, toks, remat=False)[0])(
+        params)
+    g2 = jax.grad(lambda p: loss_fn(TINY_MOE, p, toks, remat=True)[0])(
+        params)
+    for a, b in zip(jax.tree_util.tree_leaves(g1),
+                    jax.tree_util.tree_leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
