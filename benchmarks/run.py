@@ -17,7 +17,7 @@ import traceback
 
 BENCHES = ("fig1_activation", "fig3_overlap", "fig4_table3_tradeoff",
            "fig5_table4_spec", "table1_mixed", "table2_ep",
-           "bs_ablation", "kernels_bench")
+           "bs_ablation", "kernels_bench", "continuous_batching")
 
 DERIVED_KEY = {
     "fig1_activation": ("worst_rel_err", "max |emp-formula|/formula"),
@@ -32,6 +32,8 @@ DERIVED_KEY = {
                     "activated-expert reduction @BS=4 (App B)"),
     "kernels_bench": ("bytes_at_quarter_activation",
                       "HBM bytes @25% activation vs full"),
+    "continuous_batching": ("fused_speedup_bs8",
+                            "fused-scan OTPS vs lockstep host loop @bs8"),
 }
 
 

@@ -26,8 +26,9 @@ from repro.models.moe import OFF, init_moe, route  # noqa: E402
 G = 8                       # device groups == mesh "model" extent
 E, K, D, F, T = 64, 8, 64, 128, 32
 
-mesh = jax.make_mesh((G,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh_compat  # noqa: E402
+
+mesh = make_mesh_compat((G,), ("model",))
 
 
 @functools.partial(

@@ -2,7 +2,7 @@
 from repro.core.selection import (  # noqa: F401
     topk_mask, warmup_union, greedy_select, batch_select,
     per_request_select, spec_select, ep_select, restricted_topk,
-    apply_policy,
+    apply_policy, gate_histogram, affinity_score, rank_by_affinity,
 )
 from repro.core import routing, metrics  # noqa: F401
 from repro.configs.base import XSharePolicy  # noqa: F401

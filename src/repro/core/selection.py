@@ -37,11 +37,14 @@ def topk_mask(scores: jnp.ndarray, k: int) -> jnp.ndarray:
 def warmup_union(gates: jnp.ndarray, k0: int) -> jnp.ndarray:
     """S0 = union over tokens of each token's top-k0 experts.
 
-    gates: (..., T, E) -> mask (..., E).
+    gates: (..., T, E) -> mask (..., E). Tokens whose gate row is
+    entirely zero (compute-masked continuous-batching slots) contribute
+    no warm-up experts.
     """
     if k0 <= 0:
         return jnp.zeros(gates.shape[:-2] + gates.shape[-1:], dtype=bool)
     per_token = topk_mask(gates, k0)          # (..., T, E)
+    per_token = per_token & (gates.sum(-1, keepdims=True) > 0)
     return per_token.any(axis=-2)             # (..., E)
 
 
@@ -175,6 +178,51 @@ def restricted_topk(gates: jnp.ndarray, mask: jnp.ndarray, k: int,
     else:
         w = jnp.where(valid, top_g, 0.0)
     return idx, w
+
+
+# ------------------------------------------------- scheduling affinity ----
+#
+# The paper's correlation-aware selection lifted one level up, to the
+# serving scheduler: instead of (only) shrinking the expert set for a
+# batch we are handed, *compose* the batch so its requests already share
+# experts. A request is summarized by its gate histogram (mean router
+# probability vector over its prompt tokens); the admission policy
+# greedily admits the waiting request whose histogram overlaps the
+# running batch's aggregated gate mass the most.
+
+def gate_histogram(gates: jnp.ndarray) -> jnp.ndarray:
+    """Mean router probability vector over tokens. (..., T, E) -> (..., E).
+
+    The natural request summary under the paper's modular proxy
+    objective: the batch-level aggregated utility of expert j is just
+    the sum of the member histograms' entries at j.
+    """
+    return gates.mean(axis=-2)
+
+
+def affinity_score(cand_hist: jnp.ndarray,
+                   batch_mass: jnp.ndarray) -> jnp.ndarray:
+    """Histogram-intersection affinity between a candidate request and
+    the running batch's aggregated gate mass.
+
+    Both sides are normalized to unit mass, so the score is the shared
+    gate probability mass: 1.0 = identical expert usage, 0.0 = fully
+    disjoint. cand_hist: (..., E); batch_mass: (E,). Returns (...,).
+    Against an empty batch (all-zero mass) every candidate scores 0 —
+    ties that callers break FIFO.
+    """
+    c = cand_hist / jnp.maximum(
+        cand_hist.sum(-1, keepdims=True), 1e-30)
+    b = batch_mass / jnp.maximum(batch_mass.sum(-1, keepdims=True), 1e-30)
+    return jnp.minimum(c, b).sum(-1)
+
+
+def rank_by_affinity(cand_hists: jnp.ndarray,
+                     batch_mass: jnp.ndarray) -> jnp.ndarray:
+    """Affinity score per waiting request. (N, E), (E,) -> (N,) scores;
+    the greedy admission policy admits argmax (first index on ties, so an
+    empty batch degenerates to FIFO)."""
+    return affinity_score(cand_hists, batch_mass[None, :])
 
 
 def apply_policy(gates: jnp.ndarray, policy, *, top_k: int,

@@ -1,0 +1,15 @@
+"""Pallas-TPU API compatibility across jax versions.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in
+newer jax releases; the fields we use (dimension_semantics, ...) are
+identical. Kernels import the factory from here so they run on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(**kwargs):
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _kernel(ids_ref, valid_ref, x_ref, w1_ref, w3_ref, w2_ref, comb_ref,
             o_ref, acc_ref, *, num_f_tiles: int):
@@ -95,7 +97,7 @@ def moe_ffn(x: jnp.ndarray, w1: jnp.ndarray, w3: jnp.ndarray,
         ),
         out_shape=jax.ShapeDtypeStruct((T, d), x.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary")),
     )(ids, valid, x, w1, w3, w2, combine)
     return out

@@ -139,12 +139,14 @@ def _attn_block_decode(cfg: ArchConfig, lp: Dict, x: jnp.ndarray,
 
 def _ffn_block(cfg: ArchConfig, lp: Dict, x: jnp.ndarray,
                policy: XSharePolicy, spec_shape, capacity,
-               capacity_factor: float):
+               capacity_factor: float,
+               token_mask: Optional[jnp.ndarray] = None):
     if cfg.family == "moe":
         h = rms_norm(x, lp["moe_norm"], cfg.norm_eps)
         y, aux = moe_apply(lp["moe"], h, cfg.moe, policy,
                            spec_shape=spec_shape, capacity=capacity,
-                           capacity_factor=capacity_factor)
+                           capacity_factor=capacity_factor,
+                           token_mask=token_mask)
         return x + y, aux
     h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
     return x + mlp_apply(lp["mlp"], h, cfg.act), {}
@@ -317,9 +319,16 @@ def effective_window(cfg: ArchConfig, *, force_window: Optional[int] = None
 def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype, *,
                force_window: Optional[int] = None) -> Dict:
     """Decode cache pytree. cache_len must include room for new tokens
-    (spec verify) when no window is set."""
+    (spec verify) when no window is set.
+
+    ``cur_len`` is a per-slot (batch,) vector — the universal cache
+    representation: lockstep decode advances every row together,
+    speculative decode rolls rows back raggedly, and the continuous-
+    batching scheduler (serving/scheduler.py) gives every slot an
+    independent lifetime via insert_request / evict_slot below.
+    """
     L, d = cfg.num_layers, cfg.d_model
-    cache: Dict = {"cur_len": jnp.zeros((), jnp.int32)}
+    cache: Dict = {"cur_len": jnp.zeros((batch,), jnp.int32)}
     win = effective_window(cfg, force_window=force_window)
     C = (win + WINDOW_MARGIN) if win is not None else cache_len
 
@@ -341,6 +350,49 @@ def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype, *,
     if cfg.family == "hybrid":
         cache["shared_k"], cache["shared_v"] = kv(_num_shared_apps(cfg))
     return cache
+
+
+# Every stacked cache array carries batch on axis 1 (leading axis is the
+# layer / shared-block stack); cur_len is the lone per-slot (B,) vector.
+_CACHE_BATCH_AXIS = 1
+
+
+def insert_request(cache: Dict, req_cache: Dict, slot, src=0) -> Dict:
+    """Cache surgery: copy row `src` of a prefilled cache (batch >= 1 —
+    the scheduler batch-prefills simultaneous admissions) into row `slot`
+    of a running batch cache.
+
+    The whole per-slot extent (full cache sequence axis included) is
+    overwritten, so whatever a previous occupant — or a compute-masked
+    empty slot — left behind is erased. `slot` / `src` may be Python ints
+    or traced scalars, so one jitted copy serves every (slot, src) pair.
+    """
+    out = {}
+    for k, v in cache.items():
+        if k == "cur_len":
+            r = jax.lax.dynamic_slice_in_dim(req_cache[k], src, 1, axis=0)
+            out[k] = jax.lax.dynamic_update_slice(v, r.astype(v.dtype),
+                                                  (slot,))
+        else:
+            r = jax.lax.dynamic_slice_in_dim(req_cache[k], src, 1,
+                                             axis=_CACHE_BATCH_AXIS)
+            start = (0, slot) + (0,) * (v.ndim - _CACHE_BATCH_AXIS - 1)
+            out[k] = jax.lax.dynamic_update_slice(v, r.astype(v.dtype),
+                                                  start)
+    return out
+
+
+def evict_slot(cache: Dict, slot) -> Dict:
+    """Cache surgery: mark row `slot` free (cur_len = 0).
+
+    KV / state contents are left in place — they are dead weight until
+    insert_request overwrites the row, and the scheduler compute-masks
+    evicted slots so they never influence live requests.
+    """
+    out = dict(cache)
+    out["cur_len"] = jax.lax.dynamic_update_slice(
+        cache["cur_len"], jnp.zeros((1,), cache["cur_len"].dtype), (slot,))
+    return out
 
 
 # -------------------------------------------------------------- prefill ---
@@ -379,7 +431,7 @@ def prefill(cfg: ArchConfig, params, tokens: jnp.ndarray, *,
     cdt = cache_dtype or x.dtype
 
     cache = init_cache(cfg, B, cache_len, cdt, force_window=force_window)
-    cache["cur_len"] = jnp.asarray(T, jnp.int32)
+    cache["cur_len"] = jnp.full((B,), T, jnp.int32)
 
     if cfg.family in ("dense", "vlm", "audio", "moe"):
         def layer(h, lp):
@@ -470,9 +522,17 @@ def decode_step(cfg: ArchConfig, params, tokens: jnp.ndarray, cache: Dict, *,
                 policy: XSharePolicy = OFF,
                 spec_shape: Optional[Tuple[int, int]] = None,
                 force_window: Optional[int] = None,
-                capacity_factor: float = 2.0):
+                capacity_factor: float = 2.0,
+                active: Optional[jnp.ndarray] = None):
     """Serve step: T new tokens per sequence (T=1 plain decode, T=1+L_s
     speculative verify). tokens: (B, T) (audio: (B,T,K)).
+
+    active: optional (B,) bool — compute-mask for continuous batching:
+    rows that are False (finished / empty slots) are excluded from MoE
+    routing (no expert activation, no capacity consumption, no influence
+    on XShare batch selection) and their aux metrics. Their logits are
+    garbage the caller must ignore.
+
     Returns (logits (B,T,V[,K->(B,T,K,V)]), new cache, aux)."""
     x = embed_tokens(cfg, params, tokens)
     B, T = x.shape[:2]
@@ -480,6 +540,8 @@ def decode_step(cfg: ArchConfig, params, tokens: jnp.ndarray, cache: Dict, *,
     base = cur.reshape(-1, 1) if cur.ndim else jnp.full((B, 1), cur)
     positions = base + jnp.arange(T)[None, :]            # (B, T)
     win = effective_window(cfg, force_window=force_window)
+    token_mask = None if active is None else \
+        jnp.broadcast_to(active[:, None], (B, T))
 
     new_cache = dict(cache)
     if cfg.family in ("dense", "vlm", "audio", "moe"):
@@ -488,7 +550,7 @@ def decode_step(cfg: ArchConfig, params, tokens: jnp.ndarray, cache: Dict, *,
             h, ck, cv = _attn_block_decode(cfg, lp, h, positions, ck, cv,
                                            cur, win)
             h, aux = _ffn_block(cfg, lp, h, policy, spec_shape, None,
-                                capacity_factor)
+                                capacity_factor, token_mask)
             return h, (ck, cv, aux)
         x, (cks, cvs, aux) = jax.lax.scan(
             layer, x, (params["layers"], cache["kv_k"], cache["kv_v"]))

@@ -47,13 +47,22 @@ def init_moe(key, moe: MoEConfig, d_model: int, dtype,
 
 
 def route(p: Dict, x: jnp.ndarray, moe: MoEConfig, policy: XSharePolicy,
-          spec_shape: Optional[Tuple[int, int]] = None):
+          spec_shape: Optional[Tuple[int, int]] = None,
+          token_mask: Optional[jnp.ndarray] = None):
     """Router + XShare selection. x: (T, d).
+
+    token_mask: optional (T,) bool — masked-out tokens (inactive
+    continuous-batching slots) are dropped from routing entirely: their
+    gate mass is zeroed before XShare batch aggregation, their expert
+    index becomes -1 (a zero one-hot), so they consume no dispatch
+    capacity and never count as activating an expert.
 
     Returns (idx (T,k), weights (T,k), aux dict of selection metrics).
     """
     logits = jnp.asarray(x, jnp.float32) @ jnp.asarray(p["wg"], jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
+    if token_mask is not None:
+        probs = probs * token_mask[:, None].astype(probs.dtype)
     if policy.mode == "off":
         idx, w = topk_route(logits, moe.top_k, normalize=moe.normalize_gates)
         mask = jnp.ones((moe.num_experts,), bool)
@@ -61,6 +70,9 @@ def route(p: Dict, x: jnp.ndarray, moe: MoEConfig, policy: XSharePolicy,
         idx, w, mask = selection.apply_policy(
             probs, policy, top_k=moe.top_k, spec_shape=spec_shape,
             logits=logits)
+    if token_mask is not None:
+        idx = jnp.where(token_mask[:, None], idx, -1)
+        w = jnp.where(token_mask[:, None], w, 0.0)
     one_hot = jax.nn.one_hot(idx, moe.num_experts, dtype=w.dtype)
     combine = (one_hot * w[..., None]).sum(axis=-2)       # (T, E)
     active = (combine > 0).any(axis=0)
@@ -69,8 +81,13 @@ def route(p: Dict, x: jnp.ndarray, moe: MoEConfig, policy: XSharePolicy,
     # (f_e = fraction of tokens routed to e, P_e = mean router prob).
     # Real MoEs train with this — without it the router collapses and
     # the batch-activation statistics the paper studies never appear.
-    frac = (one_hot.sum(-2) > 0).astype(jnp.float32).mean(0)   # (E,)
-    lb = moe.num_experts * (frac * probs.mean(0)).sum() / moe.top_k
+    # masked rows are zeroed above, so sums only see live tokens — but
+    # the mean must divide by the live-token count, not T, or lb_loss
+    # deflates as the running batch empties
+    denom = probs.shape[0] if token_mask is None else \
+        jnp.maximum(token_mask.sum(), 1).astype(jnp.float32)
+    frac = (one_hot.sum(-2) > 0).astype(jnp.float32).sum(0) / denom  # (E,)
+    lb = moe.num_experts * (frac * (probs.sum(0) / denom)).sum() / moe.top_k
     aux = {
         "activated_experts": active.sum(),
         "selected_set": mask.sum(),
@@ -98,6 +115,14 @@ def expert_ffn(p: Dict, x: jnp.ndarray, idx: jnp.ndarray, w: jnp.ndarray,
     dropped (standard GShard semantics); pass capacity=t for exact,
     drop-free computation (accuracy benchmarks; requires G == 1 to be
     truly global).
+
+    Decode-sized token counts (T <= 32) with a drop-free capacity take a
+    dense fast path instead: every expert runs on every token and the
+    combine weights zero the unselected ones. At these sizes the
+    dispatch one-hots/cumsums/scatter einsums cost far more than the
+    (tiny) extra FLOPs — the serving hot loop is per-op-overhead bound,
+    not math bound — and the result is the same expert outputs under the
+    same gates, with no cross-token capacity coupling at all.
     """
     T, d = x.shape
     E, k = moe.num_experts, idx.shape[-1]
@@ -113,6 +138,24 @@ def expert_ffn(p: Dict, x: jnp.ndarray, idx: jnp.ndarray, w: jnp.ndarray,
         C = min(C, t)
     else:
         C = min(capacity, t)
+
+    # decode-size dense fast path — only off-mesh: it has none of the
+    # dispatch path's sharding constraints, so under an EP mesh it would
+    # all-gather every expert's weights onto each device
+    from repro.sharding import current_mesh
+    if G == 1 and C >= T and T <= 32 and current_mesh() is None:
+        E_, f = E, p["w1"].shape[-1]
+        one_hot = jax.nn.one_hot(idx, E_, dtype=jnp.float32)
+        gate = (one_hot * w[..., None].astype(jnp.float32)).sum(-2)  # (T,E)
+        # flat GEMMs (XLA CPU/TPU handle one (T, E*f) dot far better
+        # than E tiny batched matmuls); gate folds in before w2 — same
+        # sum, one fewer (T,E,d) intermediate
+        w1f = p["w1"].transpose(1, 0, 2).reshape(d, E_ * f)
+        w3f = p["w3"].transpose(1, 0, 2).reshape(d, E_ * f)
+        h = (x @ w1f).reshape(T, E_, f)
+        h = jax.nn.silu(h) * (x @ w3f).reshape(T, E_, f)
+        hg = (h * gate[:, :, None].astype(h.dtype)).reshape(T, E_ * f)
+        return (hg @ p["w2"].reshape(E_ * f, d)).astype(x.dtype)
 
     xg = x.reshape(G, t, d)
     one_hot = jax.nn.one_hot(idx.reshape(G, t, k), E, dtype=jnp.float32)
@@ -140,15 +183,20 @@ def moe_apply(p: Dict, x: jnp.ndarray, moe: MoEConfig,
               policy: XSharePolicy = OFF, *,
               spec_shape: Optional[Tuple[int, int]] = None,
               capacity_factor: float = 1.25,
-              capacity: Optional[int] = None):
+              capacity: Optional[int] = None,
+              token_mask: Optional[jnp.ndarray] = None):
     """Full MoE layer. x: (..., d) (leading dims flattened internally).
+
+    token_mask: optional bool array matching x's leading dims — tokens
+    masked False are excluded from routing (see route()).
 
     Returns (y, aux). Shared experts (DeepSeek-style) are added
     unconditionally — they are outside the selection problem (Sec 2.1).
     """
     shape = x.shape
     xt = x.reshape(-1, shape[-1])
-    idx, w, aux = route(p, xt, moe, policy, spec_shape)
+    tm = None if token_mask is None else token_mask.reshape(-1)
+    idx, w, aux = route(p, xt, moe, policy, spec_shape, token_mask=tm)
     y = expert_ffn(p, xt, idx, w, moe, capacity_factor=capacity_factor,
                    capacity=capacity)
     if "ws1" in p:

@@ -1,3 +1,11 @@
 from repro.serving.engine import Engine, GenStats  # noqa: F401
-from repro.serving.spec_decode import greedy_accept, SpecResult  # noqa: F401
+from repro.serving.scheduler import (  # noqa: F401
+    Request, RequestState, Scheduler,
+)
+from repro.serving.step import (  # noqa: F401
+    StepFns, build_step_fns, decode_steps_fused, gate_probe,
+)
+from repro.serving.spec_decode import (  # noqa: F401
+    greedy_accept, rollback_cur_len, SpecResult,
+)
 from repro.serving import sampler  # noqa: F401

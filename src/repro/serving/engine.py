@@ -1,11 +1,22 @@
-"""Batched serving engine: prefill -> decode loop, optional speculative
-decoding (draft model + ragged per-request acceptance), XShare routing
-policies applied per decode/verify step, OTPS accounting.
+"""Serving engine facade over the continuous-batching subsystem.
 
-All requests advance in lockstep steps (static shapes for jit); ragged
-speculative acceptance is handled with per-row cache cur_len vectors, so
-each request's cache stays exact while the batch stays rectangular —
-the same structure vLLM-style engines use for batched verification.
+Three layers (docs in each module):
+
+  serving/scheduler.py  — request queue, slot lifecycle, XShare-aware
+                          admission (batch composition by expert affinity)
+  serving/step.py       — fused on-device decode: sampling inside jit,
+                          lax.scan over N tokens per dispatch, per-slot
+                          active masks
+  serving/engine.py     — this facade: preserves the original
+                          ``generate()`` API (plain + speculative paths,
+                          GenStats / OTPS accounting)
+
+Plain generation routes through the scheduler (all requests arrive at
+t=0) and is token-exact vs. the retained lockstep loop under greedy
+sampling. Speculative decoding keeps the host-side draft/verify loop
+with ragged per-request acceptance; per-row cache cur_len vectors are
+now the universal cache representation (models/model.py), so the spec
+path no longer patches them in by hand.
 """
 from __future__ import annotations
 
@@ -20,8 +31,10 @@ import numpy as np
 from repro.configs.base import ArchConfig, XSharePolicy
 from repro.models import decode_step, prefill
 from repro.models.moe import OFF
-from repro.serving.sampler import greedy, sample
-from repro.serving.spec_decode import greedy_accept
+from repro.serving.sampler import greedy, sample_step
+from repro.serving.scheduler import Scheduler
+from repro.serving.spec_decode import greedy_accept, rollback_cur_len
+from repro.serving.step import build_step_fns
 
 
 @dataclass
@@ -58,12 +71,16 @@ class Engine:
                  draft: Optional[Tuple[ArchConfig, dict]] = None,
                  spec_len: int = 0,
                  temperature: float = 0.0,
+                 decode_chunk: int = 8,
                  seed: int = 0):
         self.cfg, self.params = cfg, params
         self.policy = policy
         self.spec_len = spec_len
         self.temperature = temperature
         self.cache_len = cache_len
+        self.force_window = force_window
+        self.capacity_factor = capacity_factor
+        self.decode_chunk = decode_chunk
         self._key = jax.random.PRNGKey(seed)
         if spec_len and cfg.family == "audio":
             raise NotImplementedError("spec decode for codebook streams")
@@ -74,6 +91,11 @@ class Engine:
         cf = capacity_factor
         self._prefill = jax.jit(lambda p, t: prefill(
             cfg, p, t, cache_len=cache_len, policy=OFF,
+            force_window=force_window, capacity_factor=cf))
+        # hoisted once (the seed rebuilt this closure — and recompiled —
+        # on every generate(prefix_embeds=...) call)
+        self._prefill_pe = jax.jit(lambda p, t, pe: prefill(
+            cfg, p, t, cache_len=cache_len, policy=OFF, prefix_embeds=pe,
             force_window=force_window, capacity_factor=cf))
         self._decode = jax.jit(lambda p, t, c: decode_step(
             cfg, p, t, c, policy=policy, force_window=force_window,
@@ -89,35 +111,103 @@ class Engine:
                 dcfg, p, t, cache_len=cache_len, capacity_factor=cf))
             self._ddecode = jax.jit(lambda p, t, c: decode_step(
                 dcfg, p, t, c, capacity_factor=cf))
+        # shared compiled bundle for the continuous path (jit retraces
+        # per batch size, so one bundle serves every generate() call)
+        self._fns = build_step_fns(
+            cfg, policy=policy, cache_len=cache_len,
+            decode_chunk=decode_chunk, temperature=temperature,
+            force_window=force_window, capacity_factor=cf)
+        self._fns_by_chunk = {}   # make_scheduler decode_chunk overrides
 
     # ------------------------------------------------------------------ --
 
     def _pick(self, logits: jnp.ndarray) -> jnp.ndarray:
-        if self.temperature == 0.0:
-            return greedy(logits)
         self._key, k = jax.random.split(self._key)
-        return sample(logits, k, temperature=self.temperature)
+        return sample_step(logits, k, temperature=self.temperature)
+
+    def make_scheduler(self, *, num_slots: int,
+                       admission: str = "fcfs",
+                       decode_chunk: Optional[int] = None) -> Scheduler:
+        """A Scheduler wired to this engine's compiled functions —
+        the entry point for open-ended (arrival-process) serving.
+
+        decode_chunk overrides the engine default (shorter chunks trade
+        throughput for admission latency under live traffic); a new
+        compiled bundle is built when it differs."""
+        self._key, k = jax.random.split(self._key)
+        fns = self._fns
+        if decode_chunk is not None and decode_chunk != self.decode_chunk:
+            if decode_chunk not in self._fns_by_chunk:
+                self._fns_by_chunk[decode_chunk] = build_step_fns(
+                    self.cfg, policy=self.policy, cache_len=self.cache_len,
+                    decode_chunk=decode_chunk,
+                    temperature=self.temperature,
+                    force_window=self.force_window,
+                    capacity_factor=self.capacity_factor)
+            fns = self._fns_by_chunk[decode_chunk]
+        sched = Scheduler(
+            self.cfg, self.params, num_slots=num_slots,
+            cache_len=self.cache_len, policy=self.policy,
+            admission=admission,
+            decode_chunk=decode_chunk or self.decode_chunk,
+            temperature=self.temperature, force_window=self.force_window,
+            capacity_factor=self.capacity_factor, fns=fns)
+        sched._key = k
+        return sched
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
-                 *, prefix_embeds=None) -> Tuple[np.ndarray, GenStats]:
+                 *, prefix_embeds=None,
+                 lockstep: bool = False) -> Tuple[np.ndarray, GenStats]:
         """prompts: (B, S) int32 ((B,S,K) audio). Returns
         (tokens (B, <=max_new_tokens[, K]), stats). Greedy unless
-        temperature > 0."""
+        temperature > 0.
+
+        lockstep=True forces the legacy per-token host loop (reference
+        implementation for equivalence tests / benchmarks); the default
+        path serves the batch through the continuous scheduler with all
+        requests arriving at t=0, which is token-exact with lockstep
+        under greedy sampling."""
         if self.spec_len:
             return self._generate_spec(prompts, max_new_tokens)
-        return self._generate_plain(prompts, max_new_tokens,
-                                    prefix_embeds=prefix_embeds)
+        if lockstep or prefix_embeds is not None:
+            return self._generate_lockstep(prompts, max_new_tokens,
+                                           prefix_embeds=prefix_embeds)
+        return self._generate_continuous(prompts, max_new_tokens)
 
-    # ------------------------------------------------------------ plain --
+    # ------------------------------------------------------- continuous --
 
-    def _generate_plain(self, prompts, max_new_tokens, *, prefix_embeds):
+    def _generate_continuous(self, prompts, max_new_tokens):
+        B = prompts.shape[0]
+        stats = GenStats(prompt_len=prompts.shape[1])
+        t0 = time.perf_counter()
+        sched = self.make_scheduler(num_slots=B, admission="fcfs")
+        for b in range(B):
+            sched.submit(prompts[b], max_new_tokens)
+        states = sched.run()
+        toks = np.stack([np.stack(st.tokens[:max_new_tokens])
+                         for st in states])
+        # per-request accounting is already trimmed to each request's
+        # horizon; batch-level sched.total_steps/step_aux include chunk
+        # overshoot past it, which the lockstep reference never runs
+        stats.steps = max(len(st.tokens) for st in states) - 1
+        stats.layer_aux = max((st.layer_aux for st in states), key=len)
+        stats.new_tokens = int(np.prod(toks.shape))  # audio: K per frame
+        stats.wall_s = time.perf_counter() - t0
+        return toks, stats
+
+    # ------------------------------------------- lockstep (reference) ----
+
+    def _generate_lockstep(self, prompts, max_new_tokens, *,
+                           prefix_embeds=None):
+        """Seed-style per-token host loop: one decode dispatch and one
+        device->host sync per token. Kept as the reference for the
+        continuous engine's exactness tests and as the prefix-embeds
+        (vlm/audio frontend) path."""
         stats = GenStats(prompt_len=prompts.shape[1])
         t0 = time.perf_counter()
         if prefix_embeds is not None:
-            lg, cache, _ = jax.jit(
-                lambda p, t, pe: prefill(
-                    self.cfg, p, t, cache_len=self.cache_len,
-                    prefix_embeds=pe))(self.params, prompts, prefix_embeds)
+            lg, cache, _ = self._prefill_pe(self.params, prompts,
+                                            prefix_embeds)
         else:
             lg, cache, _ = self._prefill(self.params, prompts)
         tok = self._pick(lg)                                # (B,) or (B,K)
@@ -147,9 +237,6 @@ class Engine:
 
         lg, cache, _ = self._prefill(self.params, prompts)
         _, dcache, _ = self._dprefill(dparams, prompts)
-        cur = jnp.full((B,), S, jnp.int32)
-        cache["cur_len"] = cur
-        dcache["cur_len"] = cur
         x0 = greedy(lg)                                     # (B,)
         out_tok: List[List[int]] = [[int(x0[b])] for b in range(B)]
 
@@ -172,7 +259,7 @@ class Engine:
             res = greedy_accept(vlg, drafts)
 
             # -- ragged rollback -------------------------------------------
-            new_cur = old_cur + res.num_new
+            new_cur = rollback_cur_len(old_cur, res)
             cache["cur_len"] = new_cur
             dcache["cur_len"] = new_cur
             x0 = jnp.take_along_axis(res.new_tokens,

@@ -23,3 +23,16 @@ def sample(logits: jnp.ndarray, key, *, temperature: float = 1.0,
         cutoff = jnp.take_along_axis(sorted_l, cutoff_idx, axis=-1)
         logits = jnp.where(logits < cutoff, -1e30, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_step(logits: jnp.ndarray, key, *, temperature: float = 0.0,
+                top_p: float = 1.0) -> jnp.ndarray:
+    """On-device per-step sampler for the fused decode scan.
+
+    temperature / top_p are Python floats (static under jit), so the
+    greedy path traces to a plain argmax with no PRNG use — bit-identical
+    to the host-side greedy() the lockstep engine calls. The key is
+    threaded by the caller (one split per scanned step)."""
+    if temperature == 0.0:
+        return greedy(logits)
+    return sample(logits, key, temperature=temperature, top_p=top_p)

@@ -1,0 +1,302 @@
+"""Continuous-batching scheduler with XShare-aware admission.
+
+The serving substrate the paper's batch-composition premise actually
+needs: requests arrive and finish at different times, and the scheduler
+keeps a fixed-size running batch (static shapes for jit) whose slots
+have independent lifetimes.
+
+Request lifecycle:  waiting -> prefill -> decode -> done.
+
+  * waiting  — submitted; not yet visible (future arrival) or queued.
+  * prefill  — a single-request prefill builds its cache row, the first
+               token is sampled from the prefill logits, and the row is
+               spliced into the running batch cache (insert_request).
+  * decode   — the slot participates in fused N-token decode scans
+               (serving/step.py); the scheduler harvests tokens between
+               scans.
+  * done     — reached max_new_tokens; the slot is evicted and refilled
+               from the queue.
+
+Admission policies:
+
+  * "fcfs"     — first come, first served.
+  * "affinity" — the paper's correlation-aware selection lifted to the
+                 scheduling layer: each request carries a gate histogram
+                 (cheap router probe at submit time); admission greedily
+                 picks the waiting request whose histogram maximally
+                 overlaps the running batch's aggregated gate mass
+                 (core/selection.py rank_by_affinity). Batches then
+                 share experts *by construction*, shrinking the
+                 activated set every XShare policy works against.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, XSharePolicy
+from repro.core.selection import rank_by_affinity
+from repro.models import init_cache
+from repro.models.moe import OFF
+from repro.serving.sampler import sample_step
+from repro.serving.step import StepFns, build_step_fns
+
+WAITING, PREFILL, DECODE, DONE = "waiting", "prefill", "decode", "done"
+
+
+@dataclass
+class Request:
+    """One generation request. prompt: (S,) int32 ((S, K) audio)."""
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    arrival_s: float = 0.0  # relative to Scheduler.run() start
+
+
+@dataclass
+class RequestState:
+    """Lifecycle + per-request accounting (stats tagged per request)."""
+    req: Request
+    status: str = WAITING
+    slot: int = -1
+    tokens: List = field(default_factory=list)
+    gate_hist: Optional[np.ndarray] = None
+    t_admitted: float = float("nan")
+    t_first_token: float = float("nan")
+    t_done: float = float("nan")
+    # batch-level XShare aux for every fused step this request was live in
+    layer_aux: List[Dict] = field(default_factory=list)
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.req.arrival_s
+
+    @property
+    def ttft_s(self) -> float:
+        return self.t_first_token - self.req.arrival_s
+
+
+class Scheduler:
+    """Continuous-batching scheduler over a fixed-size slot array.
+
+    Drives the compiled StepFns bundle: per-request prefill + cache
+    insert on admission, fused N-token decode scans over the running
+    batch, eviction + re-admission as requests finish.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *,
+                 num_slots: int,
+                 cache_len: int = 512,
+                 policy: XSharePolicy = OFF,
+                 admission: str = "fcfs",
+                 decode_chunk: int = 8,
+                 temperature: float = 0.0,
+                 force_window: Optional[int] = None,
+                 capacity_factor: float = 8.0,
+                 seed: int = 0,
+                 fns: Optional[StepFns] = None):
+        if admission not in ("fcfs", "affinity"):
+            raise ValueError(f"unknown admission policy {admission!r}")
+        self.cfg, self.params = cfg, params
+        self.num_slots = num_slots
+        self.cache_len = cache_len
+        self.admission = admission
+        self.temperature = temperature
+        self.fns = fns or build_step_fns(
+            cfg, policy=policy, cache_len=cache_len,
+            decode_chunk=decode_chunk, temperature=temperature,
+            force_window=force_window, capacity_factor=capacity_factor)
+        self._key = jax.random.PRNGKey(seed)
+        self._next_rid = 0
+        self._incoming: List[RequestState] = []   # not yet arrived
+        self._queue: List[RequestState] = []      # arrived, waiting
+        self._slots: List[Optional[RequestState]] = [None] * num_slots
+        self._states: List[RequestState] = []     # submission order
+        # device-side running-batch state
+        dtype = jax.tree_util.tree_leaves(params)[0].dtype
+        self._cache = init_cache(cfg, num_slots, cache_len, dtype,
+                                 force_window=force_window)
+        tok_shape = (num_slots,) if cfg.num_codebooks == 1 \
+            else (num_slots, cfg.num_codebooks)
+        self._tok = jnp.zeros(tok_shape, jnp.int32)
+        self._active = np.zeros(num_slots, bool)
+        # host-side aggregated gate mass of the running batch (affinity)
+        E = cfg.moe.num_experts if cfg.moe else 0
+        self._batch_mass = np.zeros(E, np.float64)
+        self.total_steps = 0          # fused decode steps executed
+        self.step_aux: List[Dict] = []  # batch-level aux per decode step
+        self._t0: Optional[float] = None
+        self.wall_s = 0.0             # frozen at the end of run()
+
+    # -------------------------------------------------------- submission --
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int, *,
+               arrival_s: float = 0.0) -> RequestState:
+        req = Request(rid=self._next_rid, prompt=np.asarray(prompt),
+                      max_new_tokens=max_new_tokens, arrival_s=arrival_s)
+        self._next_rid += 1
+        st = RequestState(req=req)
+        if self.admission == "affinity" and self.fns.probe is not None:
+            hist = self.fns.probe(self.params, req.prompt[None])
+            st.gate_hist = np.asarray(hist, np.float64)
+        self._states.append(st)
+        self._incoming.append(st)
+        return st
+
+    # --------------------------------------------------------- admission --
+
+    def _pick_next(self) -> RequestState:
+        """Greedy XShare-aware admission: the queued request whose gate
+        histogram maximally overlaps the running batch's aggregated gate
+        mass. FIFO when configured so, when the model has no router, or
+        when the batch is empty (all scores 0, argmax -> head)."""
+        if self.admission == "fcfs" or not len(self._batch_mass) \
+                or any(s.gate_hist is None for s in self._queue):
+            return self._queue.pop(0)
+        hists = np.stack([s.gate_hist for s in self._queue])
+        scores = np.asarray(rank_by_affinity(
+            jnp.asarray(hists), jnp.asarray(self._batch_mass)))
+        return self._queue.pop(int(scores.argmax()))
+
+    def _first_token(self, logits: jnp.ndarray) -> jnp.ndarray:
+        self._key, k = jax.random.split(self._key)
+        return sample_step(logits, k, temperature=self.temperature)
+
+    def _admit_group(self, group, now: float) -> None:
+        """Prefill a group of same-shape admissions as ONE batched
+        prefill and splice each row into its slot. Simultaneous arrivals
+        (the all-at-t=0 case) therefore pay a single prefill dispatch —
+        and run through the numerically identical computation the
+        lockstep engine's batched prefill performs."""
+        prompts = np.stack([st.req.prompt for st, _ in group])
+        lg, req_cache, _ = self.fns.prefill(self.params, prompts)
+        toks0 = self._first_token(lg)              # (G,) or (G, K)
+        toks0_np = np.asarray(toks0)   # blocks: TTFT must include device time
+        t_first = time.perf_counter() - self._t0
+        if (len(group) == self.num_slots
+                and [slot for _, slot in group] == list(range(len(group)))
+                and not self._active.any()
+                and all(st.req.max_new_tokens > 1 for st, _ in group)):
+            # whole-batch admission into an empty machine (the all-at-t=0
+            # case): the group prefill cache IS the running cache — skip
+            # the per-slot insert dispatches entirely
+            self._cache = req_cache
+            self._tok = toks0
+            for i, (st, slot) in enumerate(group):
+                st.status = DECODE
+                st.t_admitted = now
+                st.tokens.append(toks0_np[i])
+                st.t_first_token = t_first
+                st.slot = slot
+                self._slots[slot] = st
+                self._active[slot] = True
+            return
+        for i, (st, slot) in enumerate(group):
+            st.status = PREFILL
+            st.t_admitted = now
+            st.tokens.append(toks0_np[i])
+            st.t_first_token = t_first
+            if len(st.tokens) >= st.req.max_new_tokens:
+                self._finish(st, slot=None)
+                continue
+            self._cache = self.fns.insert(
+                self._cache, req_cache, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(i, jnp.int32))
+            self._tok = self._tok.at[slot].set(toks0[i])
+            self._slots[slot] = st
+            self._active[slot] = True
+            st.slot = slot
+            st.status = DECODE
+
+    def _finish(self, st: RequestState, slot: Optional[int]) -> None:
+        st.status = DONE
+        st.t_done = time.perf_counter() - self._t0
+        if st.gate_hist is not None:       # admitted => counted in mass
+            self._batch_mass -= st.gate_hist
+        if slot is not None:
+            self._cache = self.fns.evict(self._cache,
+                                         jnp.asarray(slot, jnp.int32))
+            self._slots[slot] = None
+            self._active[slot] = False
+            st.slot = -1
+
+    def _fill_slots(self, now: float) -> None:
+        free = [s for s in range(self.num_slots) if self._slots[s] is None]
+        picks = []
+        while free and self._queue:
+            st = self._pick_next()         # greedy: sees mass so far
+            if st.gate_hist is not None:
+                self._batch_mass += st.gate_hist
+            picks.append((st, free.pop(0)))
+        # batch same-shape prompts into one prefill dispatch
+        by_shape: Dict = {}
+        for st, slot in picks:
+            by_shape.setdefault(st.req.prompt.shape, []).append((st, slot))
+        for group in by_shape.values():
+            self._admit_group(group, now)
+
+    # ------------------------------------------------------------ decode --
+
+    def _decode_round(self) -> None:
+        """One fused N-token scan + harvest. Slots carry their remaining
+        token budget on device, so a request that finishes mid-chunk
+        stops computing (and influencing XShare selection) on the next
+        step, not at the chunk boundary."""
+        remaining = np.asarray(
+            [st.req.max_new_tokens - len(st.tokens) if st else 0
+             for st in self._slots], np.int32)
+        self._key, k = jax.random.split(self._key)
+        self._tok, self._cache, toks, aux = self.fns.fused(
+            self.params, self._tok, self._cache,
+            jnp.asarray(remaining), k)
+        toks = np.asarray(toks)                    # sync point: (N, B[,K])
+        now = time.perf_counter() - self._t0
+        N = toks.shape[0]
+        self.total_steps += N
+        aux_np = {kk: np.asarray(v) for kk, v in aux.items()}
+        step_auxs = [{kk: v[i] for kk, v in aux_np.items()}
+                     for i in range(N)]
+        self.step_aux.extend(step_auxs)
+        for slot, st in enumerate(self._slots):
+            if st is None:
+                continue
+            take = min(N, st.req.max_new_tokens - len(st.tokens))
+            st.tokens.extend(toks[i, slot] for i in range(take))
+            st.layer_aux.extend(step_auxs[:take])
+            if len(st.tokens) >= st.req.max_new_tokens:
+                self._finish(st, slot=slot)
+
+    # --------------------------------------------------------------- run --
+
+    def run(self) -> List[RequestState]:
+        """Serve every submitted request to completion. Arrival times are
+        honored against the wall clock (arrival_s is relative to this
+        call). Returns RequestStates in submission order."""
+        self._t0 = time.perf_counter()
+        self._incoming.sort(key=lambda s: s.req.arrival_s)
+        while self._incoming or self._queue or self._active.any():
+            now = time.perf_counter() - self._t0
+            while self._incoming and \
+                    self._incoming[0].req.arrival_s <= now:
+                self._queue.append(self._incoming.pop(0))
+            self._fill_slots(now)
+            if self._active.any():
+                self._decode_round()
+            elif self._incoming:
+                time.sleep(min(
+                    0.01, max(0.0, self._incoming[0].req.arrival_s - now)))
+        self.wall_s = time.perf_counter() - self._t0
+        return self._states
+
+    @property
+    def elapsed_s(self) -> float:
+        """Serve wall clock: live while run() is in flight, frozen at its
+        end, 0.0 before the first run()."""
+        if self._t0 is None:
+            return 0.0
+        return self.wall_s or (time.perf_counter() - self._t0)

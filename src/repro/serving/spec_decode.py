@@ -21,6 +21,16 @@ class SpecResult(NamedTuple):
     num_new: jnp.ndarray      # (B,) == accepted + 1
 
 
+def rollback_cur_len(cur_len: jnp.ndarray, res: "SpecResult") -> jnp.ndarray:
+    """Ragged cache rollback after verification: each row advances by its
+    own accepted count. cur_len is the per-slot (B,) vector that is the
+    universal cache representation (models/model.py init_cache) — the
+    same one the continuous-batching scheduler gives independent slot
+    lifetimes with, so speculative rollback is just another per-row
+    update, no special cache shape."""
+    return cur_len + res.num_new
+
+
 def greedy_accept(verify_logits: jnp.ndarray,
                   drafts: jnp.ndarray) -> SpecResult:
     """verify_logits: (B, 1+L_s, V) target logits for inputs

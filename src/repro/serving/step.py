@@ -1,0 +1,135 @@
+"""Fused on-device decode step for the continuous-batching scheduler.
+
+The seed engine ran one jitted decode_step per token with a host round
+trip (argmax on host, np.asarray sync, python loop bookkeeping) between
+steps. Here the whole inner loop moves on device: sampling happens
+inside the jitted function (PRNG keys threaded through the scan) and
+``decode_steps_fused`` advances N tokens per dispatch as a lax.scan, so
+the host is touched once per N tokens — exactly the cadence at which the
+scheduler intervenes (admission / eviction / harvest).
+
+Per-slot active masks make the fixed-size running batch safe: finished /
+empty slots are compute-masked out of MoE routing (decode_step's
+``active`` arg — no expert activation, no dispatch capacity, no XShare
+selection influence), their cur_len does not advance, and their emitted
+tokens are garbage the scheduler never reads.
+
+build_step_fns() bundles every compiled function the scheduler needs;
+jit retraces per input shape, so one bundle serves any batch size /
+prompt length.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, XSharePolicy
+from repro.core.selection import gate_histogram
+from repro.models import decode_step, embed_tokens, prefill
+from repro.models.layers import rms_norm
+from repro.models.model import evict_slot, insert_request
+from repro.models.moe import OFF
+from repro.serving.sampler import sample_step
+
+
+def decode_steps_fused(cfg: ArchConfig, params, tok: jnp.ndarray,
+                       cache: dict, remaining: jnp.ndarray, key, *,
+                       num_steps: int,
+                       policy: XSharePolicy = OFF,
+                       temperature: float = 0.0,
+                       force_window: Optional[int] = None,
+                       capacity_factor: float = 8.0):
+    """Run `num_steps` decode+sample steps as one on-device lax.scan.
+
+    tok: (B,) int32 — each slot's last emitted token ((B, K) audio).
+    remaining: (B,) int32 — tokens each slot still owes (0 = empty /
+    evicted slot). The per-step active mask is `remaining > 0` and
+    decrements on device, so a slot that reaches its budget MID-CHUNK
+    deactivates on the very next step: its rows stop feeding XShare
+    batch selection and the activation metrics, and its cache cur_len
+    freezes. Evicted slots stay inert no matter how many scans pass
+    before a new request is inserted over them.
+
+    Returns (tok', cache', toks (num_steps, B[, K]), aux) where aux is
+    the decode_step aux pytree stacked over steps (moe: (num_steps, L)
+    per metric).
+    """
+    def body(carry, _):
+        tok, cache, remaining, key = carry
+        active = remaining > 0
+        amask = active if tok.ndim == 1 else active[:, None]
+        cur0 = cache["cur_len"]
+        lg, cache, aux = decode_step(
+            cfg, params, tok[:, None], cache, policy=policy,
+            force_window=force_window, capacity_factor=capacity_factor,
+            active=active)
+        key, sub = jax.random.split(key)
+        nxt = sample_step(lg[:, -1], sub, temperature=temperature)
+        nxt = jnp.where(amask, nxt, tok)
+        cache["cur_len"] = jnp.where(active, cur0 + 1, cur0)
+        remaining = remaining - active.astype(remaining.dtype)
+        return (nxt, cache, remaining, key), (nxt, aux)
+
+    # modest unroll: fewer while-loop trips and better cross-step fusion
+    # without blowing up compile time for large chunks
+    (tok, cache, remaining, key), (toks, aux) = jax.lax.scan(
+        body, (tok, cache, remaining, key), None, length=num_steps,
+        unroll=min(4, num_steps))
+    return tok, cache, toks, aux
+
+
+def gate_probe(cfg: ArchConfig, params, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Cheap router probe: a request's expert gate histogram (E,).
+
+    Embeds the prompt and runs only the *first MoE layer's* router on the
+    (pre-attention) hidden states — no attention, no FFN, no cache — so
+    the scheduler can score a waiting request's expert affinity without
+    paying for a prefill. An approximation of the true decode-time gate
+    histogram, but the domain signal the admission policy needs (which
+    experts a request leans on) is already present at the embedding.
+    """
+    x = embed_tokens(cfg, params, tokens)              # (B, S, d)
+    h = rms_norm(x, params["layers"]["moe_norm"][0], cfg.norm_eps)
+    wg = jnp.asarray(params["layers"]["moe"]["wg"][0], jnp.float32)
+    probs = jax.nn.softmax(jnp.asarray(h, jnp.float32) @ wg, axis=-1)
+    return gate_histogram(probs).mean(axis=0)          # (E,)
+
+
+@dataclass
+class StepFns:
+    """Compiled serving functions shared by Engine and Scheduler."""
+    prefill: Callable        # (params, tokens)            -> (lg, cache, aux)
+    fused: Callable          # (params, tok, cache, remaining, key)
+    #                        -> (tok', cache', toks, aux)
+    insert: Callable         # (cache, req_cache, slot)    -> cache
+    evict: Callable          # (cache, slot)               -> cache
+    probe: Optional[Callable]  # (params, tokens) -> (E,) | None (no MoE)
+    decode_chunk: int
+
+
+def build_step_fns(cfg: ArchConfig, *,
+                   policy: XSharePolicy = OFF,
+                   cache_len: int = 512,
+                   decode_chunk: int = 8,
+                   temperature: float = 0.0,
+                   force_window: Optional[int] = None,
+                   capacity_factor: float = 8.0) -> StepFns:
+    """Build the jitted function bundle for one (model config, serving
+    config) pair. decode_chunk is the N of decode_steps_fused — the
+    number of tokens generated between scheduler interventions."""
+    pre = jax.jit(lambda p, t: prefill(
+        cfg, p, t, cache_len=cache_len, policy=OFF,
+        force_window=force_window, capacity_factor=capacity_factor))
+    fused = jax.jit(lambda p, tok, c, rem, key: decode_steps_fused(
+        cfg, p, tok, c, rem, key, num_steps=decode_chunk, policy=policy,
+        temperature=temperature, force_window=force_window,
+        capacity_factor=capacity_factor))
+    probe = None
+    if cfg.family == "moe":
+        probe = jax.jit(lambda p, t: gate_probe(cfg, p, t))
+    return StepFns(prefill=pre, fused=fused,
+                   insert=jax.jit(insert_request), evict=jax.jit(evict_slot),
+                   probe=probe, decode_chunk=decode_chunk)
