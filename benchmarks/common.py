@@ -94,6 +94,7 @@ def teacher_forced_decode_ce(cfg: ArchConfig, params, tokens: np.ndarray,
     acts: List[float] = []
     sel: List[float] = []
     loads: List[float] = []
+    tok_loads: List[float] = []
     gmass: List[float] = []
     wall = 0.0
     logits0 = jnp.asarray(logits0, jnp.float32)
@@ -119,6 +120,8 @@ def teacher_forced_decode_ce(cfg: ArchConfig, params, tokens: np.ndarray,
             sel.append(float(np.mean(np.asarray(aux["selected_set"]))))
             loads.append(float(np.max(np.asarray(
                 aux["max_group_load"]))))
+            tok_loads.append(float(np.max(np.asarray(
+                aux["max_group_tokens"]))))
             gmass.append(float(np.mean(np.asarray(aux["gate_mass"]))))
         pos += t_step
     steps = max(1, len(acts))
@@ -127,6 +130,10 @@ def teacher_forced_decode_ce(cfg: ArchConfig, params, tokens: np.ndarray,
         "activated": float(np.mean(acts)) if acts else float("nan"),
         "selected": float(np.mean(sel)) if sel else float("nan"),
         "max_load": float(np.mean(loads)) if loads else float("nan"),
+        # real tokens landing on the busiest expert shard per step
+        # (segment sizes under sorted dispatch), not capacity padding
+        "max_shard_tokens": float(np.mean(tok_loads)) if tok_loads
+        else float("nan"),
         "gate_mass": float(np.mean(gmass)) if gmass else float("nan"),
         "wall_us_per_step": 1e6 * wall / steps,
     }

@@ -40,8 +40,13 @@ DERIVED_KEY = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke target: dispatch-path shootout only "
+                         "(reduced shapes), persists BENCH_dispatch.json")
     args = ap.parse_args()
     names = BENCHES if not args.only else tuple(args.only.split(","))
+    if args.quick:
+        names = ("kernels_bench",)
 
     results = {}
     print("name,us_per_call,derived")
@@ -50,7 +55,7 @@ def main() -> None:
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.perf_counter()
         try:
-            out = mod.run()
+            out = mod.run(quick=True) if args.quick else mod.run()
         except Exception as e:  # noqa: BLE001
             failed.append(name)
             print(f"{name},ERROR,{e!r}")
@@ -70,7 +75,7 @@ def main() -> None:
         results[name] = {"derived_desc": desc, "derived": derived, **out}
 
     path = os.path.join(os.path.dirname(__file__), "results.json")
-    if args.only and os.path.exists(path):      # merge partial runs
+    if (args.only or args.quick) and os.path.exists(path):  # merge partials
         merged = json.load(open(path))
         merged.update(results)
         results = merged

@@ -30,9 +30,15 @@ from repro.launch.mesh import make_mesh_compat  # noqa: E402
 
 mesh = make_mesh_compat((G,), ("model",))
 
+# jax.shard_map only exists in newer releases; older ones expose the
+# experimental module
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:
+    from jax.experimental.shard_map import shard_map  # noqa: E402
+
 
 @functools.partial(
-    jax.shard_map, mesh=mesh,
+    shard_map, mesh=mesh,
     in_specs=(P(), P("model"), P("model"), P("model"), P(), P()),
     out_specs=P())
 def ep_forward(x, w1, w3, w2, combine, active):
@@ -63,9 +69,7 @@ def main() -> None:
                                                  m_l=24)),
             ("Alg 6 EP-aware (k0=1, m_g=3)",
              XSharePolicy(mode="ep", k0=1, m_g=3, num_groups=G))]:
-        idx, w, aux = route(params, x, moe, pol)
-        one_hot = jax.nn.one_hot(idx, E)
-        combine = (one_hot * w[..., None]).sum(-2)
+        idx, w, combine, aux = route(params, x, moe, pol)
         active = (combine > 0).any(0)
         loads = np.asarray(per_group_load(active, G))
         y = ep_forward(x, params["w1"], params["w3"], params["w2"],

@@ -34,7 +34,7 @@ print(f"{'policy':28s} {'activated':>9s} {'selected':>8s} "
       f"{'max/GPU':>7s} {'gate mass':>9s}")
 for name, pol in policies.items():
     spec_shape = (4, 4) if pol.mode == "spec" else None
-    idx, w, aux = route(params, x, moe, pol, spec_shape=spec_shape)
+    idx, w, combine, aux = route(params, x, moe, pol, spec_shape=spec_shape)
     print(f"{name:28s} {int(aux['activated_experts']):9d} "
           f"{int(aux['selected_set']):8d} "
           f"{int(aux['max_group_load']):7d} "

@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the perf-critical serving hot spots, validated
 in interpret mode against the pure-jnp oracles in ref.py."""
 from repro.kernels.ops import (  # noqa: F401
-    xshare_moe_ffn, flash_decode, ssd_chunk_scan, moe_step_bytes,
+    xshare_moe_ffn, xshare_grouped_ffn, flash_decode, ssd_chunk_scan,
+    moe_step_bytes, dispatch_einsum_bytes, dispatch_sorted_bytes,
 )
 from repro.kernels import ref  # noqa: F401

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.compat import resolve_interpret, tpu_compiler_params
 
 _NEG = -1e30
 
@@ -66,11 +66,12 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
 def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      lengths: jnp.ndarray, *, block_s: int = 512,
-                     interpret: bool = True) -> jnp.ndarray:
+                     interpret=None) -> jnp.ndarray:
     """q: (B, H, dh); k/v: (B, S, Hkv, dh); lengths: (B,) valid lengths.
 
     Returns (B, H, dh). See ref.decode_attn_ref.
     """
+    interpret = resolve_interpret(interpret)
     B, H, dh = q.shape
     S, Hkv = k.shape[1], k.shape[2]
     rep = H // Hkv

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.compat import resolve_interpret, tpu_compiler_params
 
 
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, state_scr, *,
@@ -65,11 +65,12 @@ def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, state_scr, *,
                                              "interpret"))
 def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
              Bm: jnp.ndarray, Cm: jnp.ndarray, *, chunk: int = 128,
-             block_h: int = 8, interpret: bool = True):
+             block_h: int = 8, interpret=None):
     """x: (B,S,nh,hd); dt: (B,S,nh); A: (nh,); Bm/Cm: (B,S,nh,ds)
     (heads pre-broadcast). Returns (y (B,S,nh,hd), state (B,nh,hd,ds)).
     S must pad to a chunk multiple (dt padding 0 => exp(0)=1 decay,
     zero input: harmless)."""
+    interpret = resolve_interpret(interpret)
     B, S, nh, hd = x.shape
     ds = Bm.shape[-1]
     l = min(chunk, S)

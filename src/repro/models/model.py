@@ -140,13 +140,14 @@ def _attn_block_decode(cfg: ArchConfig, lp: Dict, x: jnp.ndarray,
 def _ffn_block(cfg: ArchConfig, lp: Dict, x: jnp.ndarray,
                policy: XSharePolicy, spec_shape, capacity,
                capacity_factor: float,
-               token_mask: Optional[jnp.ndarray] = None):
+               token_mask: Optional[jnp.ndarray] = None,
+               dispatch: str = "auto"):
     if cfg.family == "moe":
         h = rms_norm(x, lp["moe_norm"], cfg.norm_eps)
         y, aux = moe_apply(lp["moe"], h, cfg.moe, policy,
                            spec_shape=spec_shape, capacity=capacity,
                            capacity_factor=capacity_factor,
-                           token_mask=token_mask)
+                           token_mask=token_mask, dispatch=dispatch)
         return x + y, aux
     h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
     return x + mlp_apply(lp["mlp"], h, cfg.act), {}
@@ -187,7 +188,8 @@ def _backbone(cfg: ArchConfig, params, tokens: jnp.ndarray, *,
               remat: bool = False,
               window: Optional[int] = None,
               capacity: Optional[int] = None,
-              capacity_factor: float = 1.25):
+              capacity_factor: float = 1.25,
+              dispatch: str = "auto"):
     """Full-sequence backbone. Returns (final-normed hidden states, aux).
 
     window overrides cfg.attn.sliding_window (forced-window long-context
@@ -209,7 +211,7 @@ def _backbone(cfg: ArchConfig, params, tokens: jnp.ndarray, *,
             h = constrain(h, "batch", "model", None, tag="seqpar")
             h = _attn_block_full(cfg, lp, h, positions, eff_window)
             h, aux = _ffn_block(cfg, lp, h, policy, spec_shape, capacity,
-                                capacity_factor)
+                                capacity_factor, dispatch=dispatch)
             return h, aux
         f = jax.checkpoint(layer) if remat else layer
         x, aux = jax.lax.scan(f, x, params["layers"])
@@ -418,7 +420,8 @@ def prefill(cfg: ArchConfig, params, tokens: jnp.ndarray, *,
             policy: XSharePolicy = OFF,
             force_window: Optional[int] = None,
             cache_dtype=None,
-            capacity_factor: float = 1.25):
+            capacity_factor: float = 1.25,
+            dispatch: str = "auto"):
     """Process the prompt, build the decode cache. Returns
     (last-position logits (B, V[,K]), cache, aux)."""
     x = embed_tokens(cfg, params, tokens)
@@ -442,7 +445,7 @@ def prefill(cfg: ArchConfig, params, tokens: jnp.ndarray, *,
             a = A.flash_attention(q, k, v, causal=True, window=win)
             h = h + a.reshape(B, T, -1) @ lp["attn"]["wo"]
             h, aux = _ffn_block(cfg, lp, h, policy, None, None,
-                                capacity_factor)
+                                capacity_factor, dispatch=dispatch)
             ck = _build_cache_slice(k, C, win).astype(cdt)
             cv = _build_cache_slice(v, C, win).astype(cdt)
             return h, (ck, cv, aux)
@@ -523,7 +526,8 @@ def decode_step(cfg: ArchConfig, params, tokens: jnp.ndarray, cache: Dict, *,
                 spec_shape: Optional[Tuple[int, int]] = None,
                 force_window: Optional[int] = None,
                 capacity_factor: float = 2.0,
-                active: Optional[jnp.ndarray] = None):
+                active: Optional[jnp.ndarray] = None,
+                dispatch: str = "auto"):
     """Serve step: T new tokens per sequence (T=1 plain decode, T=1+L_s
     speculative verify). tokens: (B, T) (audio: (B,T,K)).
 
@@ -550,7 +554,7 @@ def decode_step(cfg: ArchConfig, params, tokens: jnp.ndarray, cache: Dict, *,
             h, ck, cv = _attn_block_decode(cfg, lp, h, positions, ck, cv,
                                            cur, win)
             h, aux = _ffn_block(cfg, lp, h, policy, spec_shape, None,
-                                capacity_factor, token_mask)
+                                capacity_factor, token_mask, dispatch)
             return h, (ck, cv, aux)
         x, (cks, cvs, aux) = jax.lax.scan(
             layer, x, (params["layers"], cache["kv_k"], cache["kv_v"]))

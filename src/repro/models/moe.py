@@ -1,14 +1,26 @@
 """Mixture-of-Experts FFN layer with XShare batch-aware selection as a
 first-class routing policy.
 
-Expert compute uses GShard-style capacity-based dense dispatch/combine
-einsums: with the expert axis sharded over the mesh "model" axis this
-lowers to all-to-all (token-sharded -> expert-sharded -> token-sharded),
-i.e. real expert parallelism. The paper's algorithms plug in between the
-router softmax and the dispatch: they shrink the *set* of experts any
-token may route to, which on the EP mesh bounds the per-shard load
-(Alg 5/6) and in the Pallas serving kernel skips inactive experts'
-HBM->VMEM weight streaming entirely (kernels/moe_ffn.py).
+Expert compute routes through a ``dispatch`` switch (see expert_ffn):
+
+  sorted — the default hot path: argsort token-expert pairs by expert,
+           grouped GEMM over occupied expert segments, scatter-combine
+           (models/dispatch.py + kernels/moe_ffn.py grouped_ffn).
+           Capacity-free; compute and weight traffic scale with the
+           experts XShare actually selected, not with E.
+  einsum — the GShard capacity-based dense dispatch/combine einsums,
+           retained as the reference semantics: with the expert axis
+           sharded over the mesh "model" axis the (G, t, E, C) one-hot
+           einsums lower to all-to-all.
+  dense  — decode-sized fast path: every expert runs on every token and
+           the combine weights zero the unselected (per-op-overhead
+           bound regime, T <= 32).
+
+The paper's algorithms plug in between the router softmax and the
+dispatch: they shrink the *set* of experts any token may route to,
+which on the EP mesh bounds the per-shard load (Alg 5/6) and in the
+Pallas serving kernels skips inactive experts' HBM->VMEM weight
+streaming entirely (kernels/moe_ffn.py).
 """
 from __future__ import annotations
 
@@ -21,10 +33,33 @@ from repro.configs.base import MoEConfig, XSharePolicy
 from repro.core import metrics as M
 from repro.core import selection
 from repro.core.routing import topk_route
+from repro.models import dispatch as DSP
 from repro.models.layers import dense_init, mlp_apply
-from repro.sharding import constrain
+from repro.sharding import constrain, current_mesh
 
 OFF = XSharePolicy(mode="off")
+
+DISPATCH_MODES = ("auto", "sorted", "einsum", "dense")
+
+
+def policy_max_active(policy: XSharePolicy, num_tokens: int,
+                      num_experts: int, *,
+                      spec_shape: Optional[Tuple[int, int]] = None) -> int:
+    """Static upper bound on |selected expert set| under a policy — the
+    XShare budget the sorted path's padded buffer / tile count (and on
+    TPU its weight HBM traffic) scales with."""
+    E, T = num_experts, num_tokens
+    if policy.mode == "batch":
+        return min(E, policy.k0 * T + policy.m_l)
+    if policy.mode == "ep":
+        bound = policy.num_groups * policy.m_g
+        if not policy.strict_cap:
+            bound += policy.k0 * T
+        return min(E, bound)
+    if policy.mode == "spec" and spec_shape is not None:
+        b, t = spec_shape
+        return min(E, b * (policy.k0 * t + policy.m_r) + policy.m_l)
+    return E
 
 
 def init_moe(key, moe: MoEConfig, d_model: int, dtype,
@@ -57,7 +92,11 @@ def route(p: Dict, x: jnp.ndarray, moe: MoEConfig, policy: XSharePolicy,
     index becomes -1 (a zero one-hot), so they consume no dispatch
     capacity and never count as activating an expert.
 
-    Returns (idx (T,k), weights (T,k), aux dict of selection metrics).
+    Returns (idx (T,k), weights (T,k), combine (T,E) f32, aux dict).
+    The combine matrix (gate weight per token-expert cell) is built
+    exactly once here and reused by every downstream consumer — the
+    dense dispatch path, the Pallas masked-FFN kernel, and the aux
+    metrics — instead of each rebuilding the (T, k, E) one-hot.
     """
     logits = jnp.asarray(x, jnp.float32) @ jnp.asarray(p["wg"], jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
@@ -88,44 +127,72 @@ def route(p: Dict, x: jnp.ndarray, moe: MoEConfig, policy: XSharePolicy,
         jnp.maximum(token_mask.sum(), 1).astype(jnp.float32)
     frac = (one_hot.sum(-2) > 0).astype(jnp.float32).sum(0) / denom  # (E,)
     lb = moe.num_experts * (frac * (probs.sum(0) / denom)).sum() / moe.top_k
+    # real per-expert segment sizes (what each EP shard computes under
+    # sorted dispatch) — not the E/G * C rows capacity padding implies
+    counts = jnp.zeros((moe.num_experts,), jnp.int32).at[idx].add(
+        (w != 0.0).astype(jnp.int32), mode="drop")
     aux = {
         "activated_experts": active.sum(),
         "selected_set": mask.sum(),
         "max_group_load": M.max_group_load(active, G),
+        "max_group_tokens": DSP.group_token_loads(counts, G).max(),
         "gate_mass": M.gate_mass_captured(probs, mask),
         "lb_loss": lb,
     }
-    return idx, w, aux
+    return idx, w, combine, aux
+
+
+def einsum_capacity(tokens_per_group: int, top_k: int, num_experts: int,
+                    capacity_factor: float, *, min_capacity: int = 4,
+                    capacity: Optional[int] = None) -> int:
+    """Per-expert per-group buffer size C of the einsum dispatch path —
+    the one place the GShard capacity rule lives (benchmarks derive
+    their byte models from here, not from a copy)."""
+    t = tokens_per_group
+    if capacity is not None:
+        return min(capacity, t)
+    c = max(min_capacity,
+            int(-(-t * top_k * capacity_factor // num_experts)))
+    return min(c, t)
 
 
 def expert_ffn(p: Dict, x: jnp.ndarray, idx: jnp.ndarray, w: jnp.ndarray,
                moe: MoEConfig, *, capacity_factor: float = 1.25,
                min_capacity: int = 4,
                capacity: Optional[int] = None,
-               group_size: int = 2048) -> jnp.ndarray:
-    """GShard capacity-based dispatch -> per-expert FFN -> weighted combine.
+               group_size: int = 2048,
+               dispatch: str = "auto",
+               combine: Optional[jnp.ndarray] = None,
+               max_active: Optional[int] = None) -> jnp.ndarray:
+    """Routed-expert compute behind the dispatch switch.
 
-    x: (T, d); idx/w: (T, k). Tokens are processed in G groups of
-    t <= group_size (G the largest divisor of T meeting that), each group
-    getting capacity C = max(min_capacity, ceil(t*k/E * capacity_factor)):
-    the (G, t, E, C) dispatch one-hots stay bounded at production token
-    counts, and with groups sharded over the data axes and experts over
-    "model" the dispatch/combine einsums lower to all-to-all (expert
-    parallelism). Tokens beyond an expert's per-group capacity are
-    dropped (standard GShard semantics); pass capacity=t for exact,
-    drop-free computation (accuracy benchmarks; requires G == 1 to be
-    truly global).
+    x: (T, d); idx/w: (T, k); combine: optional (T, E) gate matrix from
+    route() (reused by the dense path instead of rebuilding the one-hot).
 
-    Decode-sized token counts (T <= 32) with a drop-free capacity take a
-    dense fast path instead: every expert runs on every token and the
-    combine weights zero the unselected ones. At these sizes the
-    dispatch one-hots/cumsums/scatter einsums cost far more than the
-    (tiny) extra FLOPs — the serving hot loop is per-op-overhead bound,
-    not math bound — and the result is the same expert outputs under the
-    same gates, with no cross-token capacity coupling at all.
+    dispatch:
+      "sorted" — argsort pairs by expert, grouped GEMM over occupied
+                 segments (Pallas grouped_ffn on TPU, tile-gather einsum
+                 elsewhere), scatter-combine. Capacity-free unless
+                 ``capacity`` is given (then per-expert clamp, first
+                 tokens kept — the EP load bound). max_active bounds the
+                 padded layout by the XShare budget.
+      "einsum" — GShard (G, t, E, C) one-hot dispatch/combine einsums,
+                 tokens in G groups of t <= group_size, per-group
+                 capacity C = max(min_capacity, ceil(t*k/E * cf)).
+                 Tokens beyond capacity are dropped; capacity=t is
+                 drop-free (requires G == 1 to be truly global). The
+                 reference semantics; on an EP mesh the einsums lower
+                 to all-to-all.
+      "dense"  — every expert on every token, combine weights zero the
+                 unselected. Cheapest at decode sizes where per-op
+                 overhead dominates; only off-mesh (it would all-gather
+                 every expert's weights onto each device).
+      "auto"   — dense for decode-sized drop-free batches off-mesh,
+                 sorted otherwise.
     """
     T, d = x.shape
     E, k = moe.num_experts, idx.shape[-1]
+    assert dispatch in DISPATCH_MODES, dispatch
     G = 1
     if T > group_size:
         for cand in range(T // group_size, 0, -1):
@@ -133,20 +200,21 @@ def expert_ffn(p: Dict, x: jnp.ndarray, idx: jnp.ndarray, w: jnp.ndarray,
                 G = cand
                 break
     t = T // G
-    if capacity is None:
-        C = max(min_capacity, int(-(-t * k * capacity_factor // E)))
-        C = min(C, t)
-    else:
-        C = min(capacity, t)
+    C = einsum_capacity(t, k, E, capacity_factor,
+                        min_capacity=min_capacity, capacity=capacity)
 
-    # decode-size dense fast path — only off-mesh: it has none of the
-    # dispatch path's sharding constraints, so under an EP mesh it would
-    # all-gather every expert's weights onto each device
-    from repro.sharding import current_mesh
-    if G == 1 and C >= T and T <= 32 and current_mesh() is None:
+    if dispatch == "auto":
+        if G == 1 and C >= T and T <= 32 and current_mesh() is None:
+            dispatch = "dense"
+        else:
+            dispatch = "sorted"
+
+    if dispatch == "dense":
         E_, f = E, p["w1"].shape[-1]
-        one_hot = jax.nn.one_hot(idx, E_, dtype=jnp.float32)
-        gate = (one_hot * w[..., None].astype(jnp.float32)).sum(-2)  # (T,E)
+        if combine is None:
+            one_hot = jax.nn.one_hot(idx, E_, dtype=jnp.float32)
+            combine = (one_hot * w[..., None].astype(jnp.float32)).sum(-2)
+        gate = combine                                    # (T, E)
         # flat GEMMs (XLA CPU/TPU handle one (T, E*f) dot far better
         # than E tiny batched matmuls); gate folds in before w2 — same
         # sum, one fewer (T,E,d) intermediate
@@ -156,6 +224,11 @@ def expert_ffn(p: Dict, x: jnp.ndarray, idx: jnp.ndarray, w: jnp.ndarray,
         h = jax.nn.silu(h) * (x @ w3f).reshape(T, E_, f)
         hg = (h * gate[:, :, None].astype(h.dtype)).reshape(T, E_ * f)
         return (hg @ p["w2"].reshape(E_ * f, d)).astype(x.dtype)
+
+    if dispatch == "sorted":
+        return DSP.sorted_expert_ffn(
+            x, p["w1"], p["w3"], p["w2"], idx, w,
+            capacity=capacity, max_active=max_active)
 
     xg = x.reshape(G, t, d)
     one_hot = jax.nn.one_hot(idx.reshape(G, t, k), E, dtype=jnp.float32)
@@ -184,11 +257,15 @@ def moe_apply(p: Dict, x: jnp.ndarray, moe: MoEConfig,
               spec_shape: Optional[Tuple[int, int]] = None,
               capacity_factor: float = 1.25,
               capacity: Optional[int] = None,
-              token_mask: Optional[jnp.ndarray] = None):
+              token_mask: Optional[jnp.ndarray] = None,
+              dispatch: str = "auto"):
     """Full MoE layer. x: (..., d) (leading dims flattened internally).
 
     token_mask: optional bool array matching x's leading dims — tokens
     masked False are excluded from routing (see route()).
+
+    dispatch: expert-compute path, see expert_ffn. The XShare budget
+    bound (policy_max_active) sizes the sorted path's padded layout.
 
     Returns (y, aux). Shared experts (DeepSeek-style) are added
     unconditionally — they are outside the selection problem (Sec 2.1).
@@ -196,9 +273,13 @@ def moe_apply(p: Dict, x: jnp.ndarray, moe: MoEConfig,
     shape = x.shape
     xt = x.reshape(-1, shape[-1])
     tm = None if token_mask is None else token_mask.reshape(-1)
-    idx, w, aux = route(p, xt, moe, policy, spec_shape, token_mask=tm)
+    idx, w, combine, aux = route(p, xt, moe, policy, spec_shape,
+                                 token_mask=tm)
+    ma = policy_max_active(policy, xt.shape[0], moe.num_experts,
+                           spec_shape=spec_shape)
     y = expert_ffn(p, xt, idx, w, moe, capacity_factor=capacity_factor,
-                   capacity=capacity)
+                   capacity=capacity, dispatch=dispatch, combine=combine,
+                   max_active=ma)
     if "ws1" in p:
         y = y + mlp_apply({"w1": p["ws1"], "w3": p["ws3"], "w2": p["ws2"]},
                           xt, "swiglu")

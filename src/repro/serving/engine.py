@@ -72,6 +72,7 @@ class Engine:
                  spec_len: int = 0,
                  temperature: float = 0.0,
                  decode_chunk: int = 8,
+                 dispatch: str = "auto",
                  seed: int = 0):
         self.cfg, self.params = cfg, params
         self.policy = policy
@@ -81,6 +82,7 @@ class Engine:
         self.force_window = force_window
         self.capacity_factor = capacity_factor
         self.decode_chunk = decode_chunk
+        self.dispatch = dispatch
         self._key = jax.random.PRNGKey(seed)
         if spec_len and cfg.family == "audio":
             raise NotImplementedError("spec decode for codebook streams")
@@ -89,22 +91,23 @@ class Engine:
         self.draft = draft
 
         cf = capacity_factor
+        dsp = dispatch
         self._prefill = jax.jit(lambda p, t: prefill(
             cfg, p, t, cache_len=cache_len, policy=OFF,
-            force_window=force_window, capacity_factor=cf))
+            force_window=force_window, capacity_factor=cf, dispatch=dsp))
         # hoisted once (the seed rebuilt this closure — and recompiled —
         # on every generate(prefix_embeds=...) call)
         self._prefill_pe = jax.jit(lambda p, t, pe: prefill(
             cfg, p, t, cache_len=cache_len, policy=OFF, prefix_embeds=pe,
-            force_window=force_window, capacity_factor=cf))
+            force_window=force_window, capacity_factor=cf, dispatch=dsp))
         self._decode = jax.jit(lambda p, t, c: decode_step(
             cfg, p, t, c, policy=policy, force_window=force_window,
-            capacity_factor=cf))
+            capacity_factor=cf, dispatch=dsp))
         spec_policy = policy if policy.mode in ("off", "spec") else OFF
         self._verify = jax.jit(lambda p, t, c: decode_step(
             cfg, p, t, c, policy=spec_policy,
             spec_shape=(t.shape[0], t.shape[1]),
-            force_window=force_window, capacity_factor=cf))
+            force_window=force_window, capacity_factor=cf, dispatch=dsp))
         if draft:
             dcfg, _ = draft
             self._dprefill = jax.jit(lambda p, t: prefill(
@@ -116,7 +119,7 @@ class Engine:
         self._fns = build_step_fns(
             cfg, policy=policy, cache_len=cache_len,
             decode_chunk=decode_chunk, temperature=temperature,
-            force_window=force_window, capacity_factor=cf)
+            force_window=force_window, capacity_factor=cf, dispatch=dsp)
         self._fns_by_chunk = {}   # make_scheduler decode_chunk overrides
 
     # ------------------------------------------------------------------ --
@@ -143,7 +146,8 @@ class Engine:
                     decode_chunk=decode_chunk,
                     temperature=self.temperature,
                     force_window=self.force_window,
-                    capacity_factor=self.capacity_factor)
+                    capacity_factor=self.capacity_factor,
+                    dispatch=self.dispatch)
             fns = self._fns_by_chunk[decode_chunk]
         sched = Scheduler(
             self.cfg, self.params, num_slots=num_slots,

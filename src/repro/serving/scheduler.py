@@ -98,6 +98,7 @@ class Scheduler:
                  temperature: float = 0.0,
                  force_window: Optional[int] = None,
                  capacity_factor: float = 8.0,
+                 dispatch: str = "auto",
                  seed: int = 0,
                  fns: Optional[StepFns] = None):
         if admission not in ("fcfs", "affinity"):
@@ -110,7 +111,8 @@ class Scheduler:
         self.fns = fns or build_step_fns(
             cfg, policy=policy, cache_len=cache_len,
             decode_chunk=decode_chunk, temperature=temperature,
-            force_window=force_window, capacity_factor=capacity_factor)
+            force_window=force_window, capacity_factor=capacity_factor,
+            dispatch=dispatch)
         self._key = jax.random.PRNGKey(seed)
         self._next_rid = 0
         self._incoming: List[RequestState] = []   # not yet arrived

@@ -41,7 +41,8 @@ def decode_steps_fused(cfg: ArchConfig, params, tok: jnp.ndarray,
                        policy: XSharePolicy = OFF,
                        temperature: float = 0.0,
                        force_window: Optional[int] = None,
-                       capacity_factor: float = 8.0):
+                       capacity_factor: float = 8.0,
+                       dispatch: str = "auto"):
     """Run `num_steps` decode+sample steps as one on-device lax.scan.
 
     tok: (B,) int32 — each slot's last emitted token ((B, K) audio).
@@ -52,6 +53,11 @@ def decode_steps_fused(cfg: ArchConfig, params, tok: jnp.ndarray,
     batch selection and the activation metrics, and its cache cur_len
     freezes. Evicted slots stay inert no matter how many scans pass
     before a new request is inserted over them.
+
+    dispatch: MoE expert-compute path (models/moe.py) — the fused scan
+    and the dense decode fast path unify behind this one switch
+    ("auto": dense off-mesh at decode sizes, sorted grouped-GEMM
+    dispatch elsewhere).
 
     Returns (tok', cache', toks (num_steps, B[, K]), aux) where aux is
     the decode_step aux pytree stacked over steps (moe: (num_steps, L)
@@ -65,7 +71,7 @@ def decode_steps_fused(cfg: ArchConfig, params, tok: jnp.ndarray,
         lg, cache, aux = decode_step(
             cfg, params, tok[:, None], cache, policy=policy,
             force_window=force_window, capacity_factor=capacity_factor,
-            active=active)
+            active=active, dispatch=dispatch)
         key, sub = jax.random.split(key)
         nxt = sample_step(lg[:, -1], sub, temperature=temperature)
         nxt = jnp.where(amask, nxt, tok)
@@ -116,17 +122,19 @@ def build_step_fns(cfg: ArchConfig, *,
                    decode_chunk: int = 8,
                    temperature: float = 0.0,
                    force_window: Optional[int] = None,
-                   capacity_factor: float = 8.0) -> StepFns:
+                   capacity_factor: float = 8.0,
+                   dispatch: str = "auto") -> StepFns:
     """Build the jitted function bundle for one (model config, serving
     config) pair. decode_chunk is the N of decode_steps_fused — the
     number of tokens generated between scheduler interventions."""
     pre = jax.jit(lambda p, t: prefill(
         cfg, p, t, cache_len=cache_len, policy=OFF,
-        force_window=force_window, capacity_factor=capacity_factor))
+        force_window=force_window, capacity_factor=capacity_factor,
+        dispatch=dispatch))
     fused = jax.jit(lambda p, tok, c, rem, key: decode_steps_fused(
         cfg, p, tok, c, rem, key, num_steps=decode_chunk, policy=policy,
         temperature=temperature, force_window=force_window,
-        capacity_factor=capacity_factor))
+        capacity_factor=capacity_factor, dispatch=dispatch))
     probe = None
     if cfg.family == "moe":
         probe = jax.jit(lambda p, t: gate_probe(cfg, p, t))

@@ -38,6 +38,19 @@ def batch_axes() -> Tuple[str, ...]:
     return _STATE["batch_axes"]
 
 
+def model_axis_size() -> int:
+    """Extent of the "model" mesh axis (1 outside any mesh context).
+
+    The expert axis shards contiguously over "model", so this is also
+    the number of expert-parallel shards: sorted dispatch rounds its
+    tile count to a multiple of it and constrains the tile axis over
+    "model" (expert-contiguous tiles => per-shard segments)."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return 1
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+
 def constrain(x, *axes: Optional[str], tag: Optional[str] = None):
     """axes entries: None, "model", or "batch" (mapped to the configured
     data-parallel axes tuple). Tagged constraints can be disabled per

@@ -19,13 +19,14 @@ def setup(T=12, seed=0):
     return p, x
 
 
-def test_expert_ffn_matches_dense_reference():
-    """Drop-free capacity == the dense masked-expert oracle."""
+@pytest.mark.parametrize("dispatch", ["sorted", "einsum", "dense", "auto"])
+def test_expert_ffn_matches_dense_reference(dispatch):
+    """Drop-free capacity == the dense masked-expert oracle, on every
+    dispatch path."""
     p, x = setup()
-    idx, w, _ = route(p, x, MOE, OFF)
-    one_hot = jax.nn.one_hot(idx, MOE.num_experts)
-    combine = (one_hot * w[..., None]).sum(-2)
-    y = expert_ffn(p, x, idx, w, MOE, capacity=x.shape[0])
+    idx, w, combine, _ = route(p, x, MOE, OFF)
+    y = expert_ffn(p, x, idx, w, MOE, capacity=x.shape[0],
+                   dispatch=dispatch, combine=combine)
     ref = moe_ffn_ref(x, p["w1"], p["w3"], p["w2"], combine,
                       jnp.ones(MOE.num_experts, bool))
     np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4)
@@ -33,10 +34,12 @@ def test_expert_ffn_matches_dense_reference():
 
 def test_grouped_dispatch_matches_single_group():
     p, x = setup(T=64)
-    idx, w, _ = route(p, x, MOE, OFF)
-    y1 = expert_ffn(p, x, idx, w, MOE, capacity=64, group_size=10**9)
+    idx, w, _, _ = route(p, x, MOE, OFF)
+    y1 = expert_ffn(p, x, idx, w, MOE, capacity=64, group_size=10**9,
+                    dispatch="einsum")
     # grouped path with per-group drop-free capacity
-    y2 = expert_ffn(p, x, idx, w, MOE, capacity=16, group_size=16)
+    y2 = expert_ffn(p, x, idx, w, MOE, capacity=16, group_size=16,
+                    dispatch="einsum")
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
 
 
@@ -46,9 +49,9 @@ def test_capacity_drops_zero_out_overflow_tokens():
     p, x = setup(T=6)
     idx = jnp.zeros((6, 2), jnp.int32).at[:, 1].set(1)  # all -> experts 0,1
     w = jnp.full((6, 2), 0.5)
-    y = expert_ffn(p, x, idx, w, MOE, capacity=1)
+    y = expert_ffn(p, x, idx, w, MOE, capacity=1, dispatch="einsum")
     assert bool(jnp.isfinite(y).all())
-    full = expert_ffn(p, x, idx, w, MOE, capacity=6)
+    full = expert_ffn(p, x, idx, w, MOE, capacity=6, dispatch="einsum")
     assert float(jnp.abs(y[0] - full[0]).max()) < 1e-5   # first token kept
     assert float(jnp.abs(y[1]).max()) == 0.0             # dropped entirely
 
@@ -59,9 +62,9 @@ def test_capacity_drops_zero_out_overflow_tokens():
 ])
 def test_policy_reduces_activation(mode, kwargs):
     p, x = setup(T=32)
-    _, _, aux_off = route(p, x, MOE, OFF)
+    _, _, _, aux_off = route(p, x, MOE, OFF)
     pol = XSharePolicy(mode=mode, **kwargs)
-    _, _, aux_on = route(p, x, MOE, pol)
+    _, _, _, aux_on = route(p, x, MOE, pol)
     assert int(aux_on["activated_experts"]) <= int(
         aux_off["activated_experts"])
     assert float(aux_on["gate_mass"]) <= 1.0
@@ -99,11 +102,10 @@ def test_layer_output_matches_pallas_kernel_path():
     from repro.kernels.ops import xshare_moe_ffn
     p, x = setup(T=8)
     pol = XSharePolicy(mode="batch", k0=1, m_l=2)
-    idx, w, aux = route(p, x, MOE, pol)
-    one_hot = jax.nn.one_hot(idx, MOE.num_experts)
-    combine = (one_hot * w[..., None]).sum(-2)
+    idx, w, combine, aux = route(p, x, MOE, pol)
     active = (combine > 0).any(0)
-    y_einsum = expert_ffn(p, x, idx, w, MOE, capacity=8)
+    y_einsum = expert_ffn(p, x, idx, w, MOE, capacity=8,
+                          dispatch="einsum")
     y_kernel = xshare_moe_ffn(x, p["w1"], p["w3"], p["w2"], combine,
                               active, max_active=8, block_f=32)
     np.testing.assert_allclose(np.asarray(y_einsum), np.asarray(y_kernel),
