@@ -1,7 +1,10 @@
 """Continuous-batching serving demo: Poisson request traffic over
 heterogeneous synthetic datasets, served from a fixed-slot running batch
 with fused multi-token decode, under FIFO vs. XShare-affinity admission
-(batch composition by expert-gate-histogram overlap).
+(batch composition by expert-gate-histogram overlap) — then the same
+traffic under a fault-injection campaign with the robustness layer
+armed (deadlines, cancellation, bounded queue, watchdog, graceful
+XShare degradation, numerics quarantine).
 
     PYTHONPATH=src python examples/serve_continuous.py
 """
@@ -11,7 +14,7 @@ import numpy as np
 from repro.configs.registry import get_config
 from repro.data import make_dataset_family
 from repro.models import init_params, param_count
-from repro.serving import Engine
+from repro.serving import Engine, Fault, FaultInjector
 
 
 def main() -> None:
@@ -59,6 +62,32 @@ def main() -> None:
                   f"ttft {st.ttft_s*1e3:6.0f} ms  "
                   f"done {st.t_done*1e3:6.0f} ms  "
                   f"tokens {len(st.tokens)}")
+
+    # --- robustness: same traffic, hostile conditions ---------------------
+    inj = FaultInjector([
+        Fault("nan_logits", slot=1, step=12),      # device numerics
+        Fault("insert_fail", rid=5, times=1),      # transient cache splice
+        Fault("stall_decode", step=3, delay_s=0.05),
+    ])
+    sched = eng.make_scheduler(
+        num_slots=slots, admission="affinity", faults=inj,
+        invariants=True, watchdog_s=0.25, max_retries=2,
+        retry_backoff_s=0.01, max_queue=n_req, overload="shed",
+        degrade=True)
+    for i, (p, t) in enumerate(zip(prompts, arrivals)):
+        kw = dict(ttft_deadline_s=20.0, deadline_s=40.0) if i % 4 == 3 \
+            else {}
+        sched.submit(p, max_new, arrival_s=float(t), **kw)
+    sched.cancel(2)                                # caller walked away
+    states = sched.run(max_wall_s=120.0)
+    print(f"\n--- fault campaign ({len(inj.log)} faults delivered, "
+          f"{sched.retries} retries, {sched.stall_events} stalls, "
+          f"peak degrade level "
+          f"{max((l for _, l in sched.degrade_events), default=0)}) ---")
+    print("  terminal reasons:", sched.reason_counts())
+    sched.check_invariants()
+    assert all(s is None for s in sched._slots)
+    print("  invariants clean, zero slot leaks after drain")
 
 
 if __name__ == "__main__":

@@ -384,16 +384,29 @@ def insert_request(cache: Dict, req_cache: Dict, slot, src=0) -> Dict:
     return out
 
 
-def evict_slot(cache: Dict, slot) -> Dict:
+def evict_slot(cache: Dict, slot, *, scrub: bool = False) -> Dict:
     """Cache surgery: mark row `slot` free (cur_len = 0).
 
     KV / state contents are left in place — they are dead weight until
     insert_request overwrites the row, and the scheduler compute-masks
     evicted slots so they never influence live requests.
+
+    scrub=True (static) additionally zeroes the slot's every cache
+    array: numerics quarantine evicts poisoned requests this way so
+    non-finite values cannot outlive the request through any path the
+    compute mask doesn't cover.
     """
-    out = dict(cache)
-    out["cur_len"] = jax.lax.dynamic_update_slice(
-        cache["cur_len"], jnp.zeros((1,), cache["cur_len"].dtype), (slot,))
+    out = {}
+    for k, v in cache.items():
+        if k == "cur_len":
+            out[k] = jax.lax.dynamic_update_slice(
+                v, jnp.zeros((1,), v.dtype), (slot,))
+        elif scrub:
+            row = jnp.zeros((v.shape[0], 1) + v.shape[2:], v.dtype)
+            start = (0, slot) + (0,) * (v.ndim - _CACHE_BATCH_AXIS - 1)
+            out[k] = jax.lax.dynamic_update_slice(v, row, start)
+        else:
+            out[k] = v
     return out
 
 

@@ -1,11 +1,18 @@
 from repro.serving.engine import Engine, GenStats  # noqa: F401
+from repro.serving.errors import (  # noqa: F401
+    DeadlineUnmeetable, InvalidRequest, InvariantViolation, QueueFull,
+    ServingError, TransientFault, WatchdogTimeout,
+)
+from repro.serving.faults import (  # noqa: F401
+    Fault, FaultInjector, InjectedFault, sample_campaign,
+)
 from repro.serving.scheduler import (  # noqa: F401
-    Request, RequestState, Scheduler,
+    Request, RequestState, Scheduler, tighten_policy,
 )
 from repro.serving.step import (  # noqa: F401
-    StepFns, build_step_fns, decode_steps_fused, gate_probe,
+    StepFns, build_step_fns, decode_steps_fused, gate_probe, make_fused,
 )
 from repro.serving.spec_decode import (  # noqa: F401
     greedy_accept, rollback_cur_len, SpecResult,
 )
-from repro.serving import sampler  # noqa: F401
+from repro.serving import errors, faults, sampler  # noqa: F401

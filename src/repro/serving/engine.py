@@ -30,7 +30,9 @@ import numpy as np
 
 from repro.configs.base import ArchConfig, XSharePolicy
 from repro.models import decode_step, prefill
+from repro.models.model import effective_window
 from repro.models.moe import OFF
+from repro.serving.errors import validate_request
 from repro.serving.sampler import greedy, sample_step
 from repro.serving.scheduler import Scheduler
 from repro.serving.spec_decode import greedy_accept, rollback_cur_len
@@ -121,6 +123,7 @@ class Engine:
             decode_chunk=decode_chunk, temperature=temperature,
             force_window=force_window, capacity_factor=cf, dispatch=dsp)
         self._fns_by_chunk = {}   # make_scheduler decode_chunk overrides
+        self._fused_levels = {}   # degradation-level fused fns, per chunk
 
     # ------------------------------------------------------------------ --
 
@@ -130,13 +133,17 @@ class Engine:
 
     def make_scheduler(self, *, num_slots: int,
                        admission: str = "fcfs",
-                       decode_chunk: Optional[int] = None) -> Scheduler:
+                       decode_chunk: Optional[int] = None,
+                       **robustness) -> Scheduler:
         """A Scheduler wired to this engine's compiled functions —
         the entry point for open-ended (arrival-process) serving.
 
         decode_chunk overrides the engine default (shorter chunks trade
         throughput for admission latency under live traffic); a new
-        compiled bundle is built when it differs."""
+        compiled bundle is built when it differs. Extra keyword args
+        (max_queue, overload, watchdog_s, degrade, invariants, faults,
+        on_round, ...) pass through to the Scheduler's robustness
+        layer."""
         self._key, k = jax.random.split(self._key)
         fns = self._fns
         if decode_chunk is not None and decode_chunk != self.decode_chunk:
@@ -155,7 +162,9 @@ class Engine:
             admission=admission,
             decode_chunk=decode_chunk or self.decode_chunk,
             temperature=self.temperature, force_window=self.force_window,
-            capacity_factor=self.capacity_factor, fns=fns)
+            capacity_factor=self.capacity_factor, dispatch=self.dispatch,
+            fns=fns, fused_cache=self._fused_levels.setdefault(
+                decode_chunk or self.decode_chunk, {}), **robustness)
         sched._key = k
         return sched
 
@@ -171,6 +180,15 @@ class Engine:
         path serves the batch through the continuous scheduler with all
         requests arriving at t=0, which is token-exact with lockstep
         under greedy sampling."""
+        prompts = np.asarray(prompts)
+        # front-door validation (serving/errors.py taxonomy): a prompt
+        # that can't fit the cache must fail HERE with InvalidRequest,
+        # not as a cache-splice shape error deep in prefill
+        validate_request(
+            int(prompts.shape[1]), max_new_tokens,
+            cache_len=self.cache_len,
+            window=effective_window(self.cfg,
+                                    force_window=self.force_window))
         if self.spec_len:
             return self._generate_spec(prompts, max_new_tokens)
         if lockstep or prefix_embeds is not None:

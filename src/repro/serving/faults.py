@@ -1,0 +1,148 @@
+"""Deterministic, seeded fault-injection harness for the serving stack.
+
+Four fault classes, mirroring the failure modes a production MoE
+deployment actually sees (host hiccups, device numerics, cache-surgery
+races, stalled dispatch):
+
+  slow_prefill  — host-side delay before the prefill of request `rid`
+                  (slow tokenizer / weight paging / noisy neighbor).
+  nan_logits    — non-finite logits on slot `slot` at global decode step
+                  `step`, injected as a traced operand *inside* the
+                  fused scan (serving/step.py) so the quarantine path is
+                  exercised in the exact compiled function production
+                  runs.
+  insert_fail   — the cache splice (insert_request) for request `rid`
+                  raises a TransientFault for its first `times`
+                  attempts; the scheduler's retry/backoff either
+                  recovers (times <= max_retries) or sheds the request.
+  stall_decode  — host-side delay before fused decode round `step`
+                  (device preemption / collective stall); trips the
+                  step-time watchdog.
+
+Faults are specified explicitly (fully deterministic) or drawn from a
+seeded RNG (`sample_campaign`) — either way a campaign replays
+bit-identically, which is what lets tests assert that co-batched
+requests are token-exact against a fault-free run.
+
+Every delivered fault is appended to ``injector.log`` as
+``(kind, target, detail)`` so campaigns can assert delivery.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.errors import TransientFault
+
+KINDS = ("slow_prefill", "nan_logits", "insert_fail", "stall_decode")
+
+
+class InjectedFault(TransientFault):
+    """A fault raised by the injector (retryable by the watchdog)."""
+    code = "injected_fault"
+
+
+@dataclass
+class Fault:
+    """One planned fault. Targeting fields by kind:
+
+    slow_prefill: rid, delay_s
+    nan_logits:   slot, step (global decode-step index)
+    insert_fail:  rid, times (attempts that fail)
+    stall_decode: step (fused round index), delay_s
+    """
+    kind: str
+    rid: int = -1
+    slot: int = -1
+    step: int = -1
+    delay_s: float = 0.0
+    times: int = 1
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+@dataclass
+class FaultInjector:
+    """Delivers a planned fault campaign into the scheduler's hooks."""
+    faults: List[Fault] = field(default_factory=list)
+    log: List[Tuple[str, int, float]] = field(default_factory=list)
+    _insert_attempts: dict = field(default_factory=dict)
+
+    # ----------------------------------------------------------- hooks ----
+
+    def before_prefill(self, rids: List[int]) -> None:
+        """Called with the rids of one admission group, pre-prefill."""
+        delay = sum(f.delay_s for f in self.faults
+                    if f.kind == "slow_prefill" and f.rid in rids)
+        if delay:
+            self.log.append(("slow_prefill", rids[0], delay))
+            time.sleep(delay)
+
+    def before_insert(self, rid: int) -> None:
+        """Called before each insert_request attempt; raises to fail it."""
+        for f in self.faults:
+            if f.kind == "insert_fail" and f.rid == rid:
+                n = self._insert_attempts.get(rid, 0)
+                self._insert_attempts[rid] = n + 1
+                if n < f.times:
+                    self.log.append(("insert_fail", rid, float(n)))
+                    raise InjectedFault(
+                        f"injected insert failure rid={rid} attempt={n}")
+
+    def before_round(self, round_idx: int) -> None:
+        """Called before fused decode round `round_idx`."""
+        for f in self.faults:
+            if f.kind == "stall_decode" and f.step == round_idx:
+                self.log.append(("stall_decode", round_idx, f.delay_s))
+                time.sleep(f.delay_s)
+
+    def nan_fault(self, step_lo: int, step_hi: int) -> Tuple[int, int]:
+        """(slot, step-in-chunk) of the first nan_logits fault whose
+        global step falls in [step_lo, step_hi), else (-1, -1). The pair
+        is fed to the fused scan as a traced operand, so asking costs no
+        recompile."""
+        for f in self.faults:
+            if f.kind == "nan_logits" and step_lo <= f.step < step_hi:
+                self.log.append(("nan_logits", f.slot, float(f.step)))
+                return f.slot, f.step - step_lo
+        return -1, -1
+
+
+def sample_campaign(seed: int, *, num_requests: int, num_slots: int,
+                    horizon_steps: int,
+                    p_slow: float = 0.25, p_nan: float = 0.5,
+                    p_insert: float = 0.25, p_stall: float = 0.5,
+                    delay_s: float = 0.02,
+                    insert_times: Optional[int] = None) -> FaultInjector:
+    """A reproducible mixed campaign drawn from one seeded RNG.
+
+    Each fault class fires independently with its probability; targets
+    (rid / slot / step) are drawn uniformly over the campaign extent.
+    The same seed always yields the same campaign.
+    """
+    rng = np.random.default_rng(seed)
+    faults: List[Fault] = []
+    if rng.random() < p_slow:
+        faults.append(Fault("slow_prefill",
+                            rid=int(rng.integers(num_requests)),
+                            delay_s=delay_s))
+    if rng.random() < p_nan:
+        faults.append(Fault("nan_logits",
+                            slot=int(rng.integers(num_slots)),
+                            step=int(rng.integers(1, horizon_steps))))
+    if rng.random() < p_insert:
+        faults.append(Fault("insert_fail",
+                            rid=int(rng.integers(num_requests)),
+                            times=insert_times if insert_times is not None
+                            else int(rng.integers(1, 4))))
+    if rng.random() < p_stall:
+        faults.append(Fault("stall_decode",
+                            step=int(rng.integers(1, max(
+                                2, horizon_steps // 4))),
+                            delay_s=delay_s))
+    return FaultInjector(faults=faults)

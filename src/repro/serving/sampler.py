@@ -15,6 +15,13 @@ def sample(logits: jnp.ndarray, key, *, temperature: float = 1.0,
     if temperature == 0.0:
         return greedy(logits)
     logits = jnp.asarray(logits, jnp.float32) / temperature
+    # non-finite guard: jax.random.categorical on a row containing
+    # NaN/Inf returns garbage silently. Clamp to the top_p mask fill
+    # value so a poisoned row degrades to a uniform draw over the
+    # finite entries (the fused scan quarantines it upstream anyway;
+    # this keeps the lockstep/spec paths safe too). The greedy branch
+    # above is untouched — bit-identical to the seed sampler.
+    logits = jnp.where(jnp.isfinite(logits), logits, -1e30)
     if top_p < 1.0:
         sorted_l = jnp.sort(logits, axis=-1)[..., ::-1]
         probs = jax.nn.softmax(sorted_l, axis=-1)

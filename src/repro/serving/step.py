@@ -14,6 +14,15 @@ empty slots are compute-masked out of MoE routing (decode_step's
 selection influence), their cur_len does not advance, and their emitted
 tokens are garbage the scheduler never reads.
 
+Numerics quarantine: the scan checks every slot's last-position logits
+for non-finite values *before* sampling. A poisoned slot is frozen on
+the spot — token held, cur_len not advanced, compute-masked out of
+routing from the next step — and reported to the scheduler via the
+returned ``poisoned`` mask, so one NaN terminates one request instead
+of the whole fused batch. Detection is a pure elementwise pass over
+logits already materialized; on a healthy batch every guard `where`
+is the identity, keeping the fault-free path bit-exact.
+
 build_step_fns() bundles every compiled function the scheduler needs;
 jit retraces per input shape, so one bundle serves any batch size /
 prompt length.
@@ -34,6 +43,8 @@ from repro.models.model import evict_slot, insert_request
 from repro.models.moe import OFF
 from repro.serving.sampler import sample_step
 
+NO_FAULT = (-1, -1)   # disabled (slot, step) NaN-injection operand
+
 
 def decode_steps_fused(cfg: ArchConfig, params, tok: jnp.ndarray,
                        cache: dict, remaining: jnp.ndarray, key, *,
@@ -42,7 +53,8 @@ def decode_steps_fused(cfg: ArchConfig, params, tok: jnp.ndarray,
                        temperature: float = 0.0,
                        force_window: Optional[int] = None,
                        capacity_factor: float = 8.0,
-                       dispatch: str = "auto"):
+                       dispatch: str = "auto",
+                       fault: Optional[jnp.ndarray] = None):
     """Run `num_steps` decode+sample steps as one on-device lax.scan.
 
     tok: (B,) int32 — each slot's last emitted token ((B, K) audio).
@@ -59,32 +71,49 @@ def decode_steps_fused(cfg: ArchConfig, params, tok: jnp.ndarray,
     ("auto": dense off-mesh at decode sizes, sorted grouped-GEMM
     dispatch elsewhere).
 
-    Returns (tok', cache', toks (num_steps, B[, K]), aux) where aux is
-    the decode_step aux pytree stacked over steps (moe: (num_steps, L)
-    per metric).
+    fault: optional (2,) int32 (slot, step-in-chunk) — the fault-
+    injection harness (serving/faults.py) poisons that slot's logits
+    with NaN at that step. A *traced* operand, so fault campaigns and
+    production runs share one compiled scan; (-1, -1) disables it.
+
+    Returns (tok', cache', toks (num_steps, B[, K]), aux,
+    ok (num_steps, B) bool, poisoned (B,) bool): `ok[i, b]` marks a
+    real harvested token (slot active and finite at step i), `poisoned`
+    flags slots quarantined for non-finite logits.
     """
-    def body(carry, _):
-        tok, cache, remaining, key = carry
-        active = remaining > 0
-        amask = active if tok.ndim == 1 else active[:, None]
+    B = tok.shape[0]
+    fault = jnp.asarray(NO_FAULT if fault is None else fault, jnp.int32)
+
+    def body(carry, step_i):
+        tok, cache, remaining, poisoned, key = carry
+        active = (remaining > 0) & ~poisoned
         cur0 = cache["cur_len"]
         lg, cache, aux = decode_step(
             cfg, params, tok[:, None], cache, policy=policy,
             force_window=force_window, capacity_factor=capacity_factor,
             active=active, dispatch=dispatch)
+        last = lg[:, -1]                          # (B, V) or (B, K, V)
+        inject = (jnp.arange(B) == fault[0]) & (step_i == fault[1])
+        last = jnp.where(inject.reshape((B,) + (1,) * (last.ndim - 1)),
+                         jnp.nan, last)
+        finite = jnp.isfinite(last).reshape(B, -1).all(axis=1)
+        ok = active & finite                      # (B,) harvestable step
+        poisoned = poisoned | (active & ~finite)
         key, sub = jax.random.split(key)
-        nxt = sample_step(lg[:, -1], sub, temperature=temperature)
-        nxt = jnp.where(amask, nxt, tok)
-        cache["cur_len"] = jnp.where(active, cur0 + 1, cur0)
-        remaining = remaining - active.astype(remaining.dtype)
-        return (nxt, cache, remaining, key), (nxt, aux)
+        nxt = sample_step(last, sub, temperature=temperature)
+        okm = ok if tok.ndim == 1 else ok[:, None]
+        nxt = jnp.where(okm, nxt, tok)
+        cache["cur_len"] = jnp.where(ok, cur0 + 1, cur0)
+        remaining = remaining - ok.astype(remaining.dtype)
+        return (nxt, cache, remaining, poisoned, key), (nxt, ok, aux)
 
     # modest unroll: fewer while-loop trips and better cross-step fusion
     # without blowing up compile time for large chunks
-    (tok, cache, remaining, key), (toks, aux) = jax.lax.scan(
-        body, (tok, cache, remaining, key), None, length=num_steps,
+    carry0 = (tok, cache, remaining, jnp.zeros((B,), bool), key)
+    (tok, cache, remaining, poisoned, key), (toks, oks, aux) = jax.lax.scan(
+        body, carry0, jnp.arange(num_steps, dtype=jnp.int32),
         unroll=min(4, num_steps))
-    return tok, cache, toks, aux
+    return tok, cache, toks, aux, oks, poisoned
 
 
 def gate_probe(cfg: ArchConfig, params, tokens: jnp.ndarray) -> jnp.ndarray:
@@ -108,12 +137,29 @@ def gate_probe(cfg: ArchConfig, params, tokens: jnp.ndarray) -> jnp.ndarray:
 class StepFns:
     """Compiled serving functions shared by Engine and Scheduler."""
     prefill: Callable        # (params, tokens)            -> (lg, cache, aux)
-    fused: Callable          # (params, tok, cache, remaining, key)
-    #                        -> (tok', cache', toks, aux)
+    fused: Callable          # (params, tok, cache, remaining, key, fault)
+    #                        -> (tok', cache', toks, aux, ok, poisoned)
     insert: Callable         # (cache, req_cache, slot)    -> cache
     evict: Callable          # (cache, slot)               -> cache
+    evict_scrub: Callable    # (cache, slot) -> cache, row zeroed (poisoned)
     probe: Optional[Callable]  # (params, tokens) -> (E,) | None (no MoE)
     decode_chunk: int
+
+
+def make_fused(cfg: ArchConfig, *,
+               policy: XSharePolicy = OFF,
+               decode_chunk: int = 8,
+               temperature: float = 0.0,
+               force_window: Optional[int] = None,
+               capacity_factor: float = 8.0,
+               dispatch: str = "auto") -> Callable:
+    """One jitted fused-scan closure. Split out of build_step_fns so the
+    scheduler's graceful-degradation ladder can compile variants with a
+    tightened XShare policy while sharing the rest of the bundle."""
+    return jax.jit(lambda p, tok, c, rem, key, fault: decode_steps_fused(
+        cfg, p, tok, c, rem, key, num_steps=decode_chunk, policy=policy,
+        temperature=temperature, force_window=force_window,
+        capacity_factor=capacity_factor, dispatch=dispatch, fault=fault))
 
 
 def build_step_fns(cfg: ArchConfig, *,
@@ -131,13 +177,14 @@ def build_step_fns(cfg: ArchConfig, *,
         cfg, p, t, cache_len=cache_len, policy=OFF,
         force_window=force_window, capacity_factor=capacity_factor,
         dispatch=dispatch))
-    fused = jax.jit(lambda p, tok, c, rem, key: decode_steps_fused(
-        cfg, p, tok, c, rem, key, num_steps=decode_chunk, policy=policy,
-        temperature=temperature, force_window=force_window,
-        capacity_factor=capacity_factor, dispatch=dispatch))
+    fused = make_fused(cfg, policy=policy, decode_chunk=decode_chunk,
+                       temperature=temperature, force_window=force_window,
+                       capacity_factor=capacity_factor, dispatch=dispatch)
     probe = None
     if cfg.family == "moe":
         probe = jax.jit(lambda p, t: gate_probe(cfg, p, t))
     return StepFns(prefill=pre, fused=fused,
                    insert=jax.jit(insert_request), evict=jax.jit(evict_slot),
+                   evict_scrub=jax.jit(
+                       lambda c, s: evict_slot(c, s, scrub=True)),
                    probe=probe, decode_chunk=decode_chunk)
