@@ -1,0 +1,90 @@
+"""Crash-tolerant front-door demo: async token streaming with
+mid-stream cancellation, then a process kill mid-decode and a full
+recovery from the durable journal + snapshot — the recovered greedy
+streams are bit-identical to an uninterrupted run.
+
+    PYTHONPATH=src python examples/serve_frontdoor.py
+"""
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.data import make_dataset_family
+from repro.models import init_params, param_count
+from repro.serving import (Engine, Fault, FaultInjector, FrontDoor,
+                           RequestCancelled, recover)
+
+
+def main() -> None:
+    cfg = get_config("granite-moe-1b-a400m").reduced(
+        num_layers=4, max_d_model=256, max_experts=8, max_vocab=512)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    print(f"model {param_count(params)/1e6:.1f}M params, "
+          f"{cfg.moe.num_experts} experts (top-{cfg.moe.top_k})")
+
+    fam = make_dataset_family(cfg.vocab_size, ["gpqa", "aime", "mmlu"])
+    names = list(fam)
+    rng = np.random.default_rng(0)
+    n_req, slots, max_new = 6, 2, 24
+    prompts = [fam[names[i % len(names)]].sample(rng, 1, 16)[0]
+               for i in range(n_req)]
+    eng = Engine(cfg, params, cache_len=64, decode_chunk=8)
+    free, _ = eng.generate(np.stack(prompts), max_new)  # reference run
+
+    # --- 1. live streaming + mid-stream cancel ---------------------------
+    door = eng.make_frontdoor(num_slots=slots)
+    streams = [door.submit(p, max_new) for p in prompts]
+    it = iter(streams[1])
+    first = [int(next(it)), int(next(it))]
+    door.cancel(1)                                 # caller walked away
+    print(f"\nstream 1: consumed {first} live, then cancelled "
+          f"({len(first) + len(list(it))} tokens total)")
+    door.drain()
+    try:
+        streams[1].result(timeout=1.0)
+    except RequestCancelled as e:
+        print(f"  result() -> RequestCancelled: {e}")
+    survivors = [s for s in streams if s.rid != 1]
+    assert all(np.array_equal(np.asarray([int(t) for t in s.tokens]),
+                              free[s.rid]) for s in survivors)
+    print(f"  {len(survivors)} surviving streams token-exact "
+          f"vs. batch generate()")
+
+    # --- 2. kill mid-decode, recover from journal + snapshot --------------
+    tmp = tempfile.mkdtemp(prefix="xshare-frontdoor-")
+    jp, sp = os.path.join(tmp, "wal.journal"), os.path.join(tmp, "snap")
+    inj = FaultInjector([Fault("crash_mid_round", step=2),
+                         Fault("journal_torn_write", nbytes=7)])
+    door = FrontDoor(eng, num_slots=slots, journal_path=jp,
+                     snapshot_path=sp, snapshot_every_rounds=1,
+                     fsync_every=1, faults=inj).start()
+    for p in prompts:
+        door.submit(p, max_new)
+    door.drain()
+    print(f"\nprocess killed mid-round: {type(door.crashed).__name__}, "
+          f"{door.snapshots_written} snapshot(s) on disk, "
+          f"journal {os.path.getsize(jp)} bytes")
+
+    door2, report = recover(eng, journal_path=jp, snapshot_path=sp,
+                            num_slots=slots)
+    print(f"recovery: {report.requests} journaled requests -> "
+          f"{report.terminal} already terminal, {report.resumed} resumed"
+          f"{' (torn journal tail repaired)' if report.torn_tail else ''}")
+    door2.drain()
+    stats = door2.replay_stats()
+    for rid in sorted(door2.streams):
+        s = door2.streams[rid]
+        assert np.array_equal(np.asarray([int(t) for t in s.tokens]),
+                              free[rid])
+    print(f"  replay fidelity {stats['fidelity']:.3f} over "
+          f"{int(stats['replayed_tokens'])} journaled tokens, "
+          f"0 mismatches" if not stats["mismatches"] else stats)
+    print(f"  all {n_req} recovered streams bit-identical to the "
+          f"uninterrupted run")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,1 +1,3 @@
-from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint  # noqa: F401
+from repro.checkpoint.ckpt import (  # noqa: F401
+    load_checkpoint, restore_checkpoint, save_checkpoint,
+)

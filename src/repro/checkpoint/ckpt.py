@@ -40,6 +40,25 @@ def save_checkpoint(path: str, tree, *, step: Optional[int] = None,
         json.dump(meta, f, indent=1)
 
 
+def load_checkpoint(path: str):
+    """Load a checkpoint WITHOUT a target tree: returns
+    ``(flat, meta)`` where ``flat`` maps tree-path keys ("a/b/0") to
+    numpy arrays exactly as stored and ``meta`` is the JSON sidecar
+    (step / extra / keys / dtypes). bfloat16 leaves come back as the
+    stored float32 upcast — ``meta["dtypes"]`` records what was stored;
+    callers that know the original dtype re-cast (restore_checkpoint
+    does this via the target tree). The serving snapshot layer
+    (serving/journal.py) builds on this."""
+    base = path[:-4] if path.endswith(".npz") else path
+    npz = np.load(base + ".npz")
+    flat = {k: npz[k] for k in npz.files}
+    meta: Dict[str, Any] = {}
+    if os.path.exists(base + ".json"):
+        with open(base + ".json") as f:
+            meta = json.load(f)
+    return flat, meta
+
+
 def restore_checkpoint(path: str, target):
     """Restore into the structure of `target` (values replaced)."""
     npz = np.load(path if path.endswith(".npz") else path + ".npz")
@@ -51,6 +70,13 @@ def restore_checkpoint(path: str, target):
             for p in path_elems)
         arr = npz[key]
         assert arr.shape == np.shape(leaf), (key, arr.shape, np.shape(leaf))
-        leaves.append(jax.numpy.asarray(arr).astype(
-            jax.numpy.asarray(leaf).dtype))
+        if isinstance(leaf, np.ndarray):
+            # host-side numpy targets keep their exact dtype: routing
+            # them through jnp silently clamps int64/float64 to 32-bit
+            # under the default x64-disabled config (drift that corrupts
+            # e.g. serving-snapshot slot tables and step counters)
+            leaves.append(arr.astype(leaf.dtype))
+        else:
+            leaves.append(jax.numpy.asarray(arr).astype(
+                jax.numpy.asarray(leaf).dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)

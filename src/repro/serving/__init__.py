@@ -1,10 +1,19 @@
 from repro.serving.engine import Engine, GenStats  # noqa: F401
 from repro.serving.errors import (  # noqa: F401
-    DeadlineUnmeetable, InvalidRequest, InvariantViolation, QueueFull,
-    ServingError, TransientFault, WatchdogTimeout,
+    DeadlineExceeded, DeadlineUnmeetable, InvalidRequest,
+    InvariantViolation, QueueFull, RequestCancelled, RequestFailed,
+    ServingError, ShuttingDown, TransientFault, WatchdogTimeout,
+    error_for_reason,
 )
 from repro.serving.faults import (  # noqa: F401
-    Fault, FaultInjector, InjectedFault, sample_campaign,
+    Fault, FaultInjector, InjectedFault, SimulatedCrash, sample_campaign,
+)
+from repro.serving.frontdoor import (  # noqa: F401
+    FrontDoor, RecoveryReport, TokenStream, recover,
+)
+from repro.serving.journal import (  # noqa: F401
+    JournalTail, JournalWriter, Snapshot, fold_records, load_snapshot,
+    read_journal, save_snapshot,
 )
 from repro.serving.scheduler import (  # noqa: F401
     Request, RequestState, Scheduler, tighten_policy,

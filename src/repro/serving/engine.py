@@ -168,6 +168,14 @@ class Engine:
         sched._key = k
         return sched
 
+    def make_frontdoor(self, *, num_slots: int, **door_kw):
+        """A started crash-tolerant streaming FrontDoor over this
+        engine (serving/frontdoor.py): per-request token streams,
+        mid-stream cancel, graceful drain, and — with journal_path /
+        snapshot_path set — durable recovery via recover()."""
+        from repro.serving.frontdoor import FrontDoor
+        return FrontDoor(self, num_slots=num_slots, **door_kw).start()
+
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
                  *, prefix_embeds=None,
                  lockstep: bool = False) -> Tuple[np.ndarray, GenStats]:

@@ -18,6 +18,15 @@ canonical name here. Two kinds of outcome:
                                                         on a step fault
       invariant             Scheduler.check_invariants  slot-state machine
                                                         corrupted
+      shutting_down         FrontDoor.submit            door is draining
+      deadline_exceeded     TokenStream.result          request shed on a
+                                                        deadline
+      cancelled             TokenStream.result          request cancelled
+      request_failed        TokenStream.result          numerics / fault /
+                                                        wall-timeout shed
+
+    ``error_for_reason(reason)`` maps a terminal finish reason to the
+    exception class the front door raises for it.
 
   * **Finish reasons** (``RequestState.finish_reason`` on terminal
     requests — the shed/termination side of the taxonomy):
@@ -75,6 +84,28 @@ class InvariantViolation(ServingError, AssertionError):
     code = "invariant"
 
 
+class DeadlineExceeded(ServingError):
+    """A per-request TTFT or end-to-end deadline expired (the request
+    was shed; raised by TokenStream.result() at the front door)."""
+    code = "deadline_exceeded"
+
+
+class RequestCancelled(ServingError):
+    """The request was cancelled (cancel(rid)) before completing."""
+    code = "cancelled"
+
+
+class RequestFailed(ServingError):
+    """The request terminated on a fault path (numerics quarantine,
+    unrecoverable step fault, serve-loop wall timeout)."""
+    code = "request_failed"
+
+
+class ShuttingDown(ServingError):
+    """The front door is draining — no new admissions."""
+    code = "shutting_down"
+
+
 # ---------------------------------------------------- finish reasons ------
 
 REASON_COMPLETED = "completed"
@@ -90,6 +121,24 @@ REASON_WALL = "run_wall_timeout"
 SHED_REASONS = (REASON_CANCELLED, REASON_DEADLINE_TTFT, REASON_DEADLINE_E2E,
                 REASON_SHED_QUEUE, REASON_SHED_WAIT, REASON_NUMERICS,
                 REASON_FAULT, REASON_WALL)
+
+
+def error_for_reason(reason):
+    """Map a terminal finish_reason to the taxonomy exception class a
+    front-door stream raises for it — None for "completed". This is the
+    over-the-wire surface of the scheduler's shed semantics: the same
+    structured reason a co-located caller reads off RequestState."""
+    return {
+        REASON_COMPLETED: None,
+        REASON_CANCELLED: RequestCancelled,
+        REASON_DEADLINE_TTFT: DeadlineExceeded,
+        REASON_DEADLINE_E2E: DeadlineExceeded,
+        REASON_SHED_QUEUE: QueueFull,
+        REASON_SHED_WAIT: DeadlineUnmeetable,
+        REASON_NUMERICS: RequestFailed,
+        REASON_FAULT: RequestFailed,
+        REASON_WALL: RequestFailed,
+    }.get(reason, RequestFailed)
 
 
 def validate_request(prompt_len: int, max_new_tokens: int, *,

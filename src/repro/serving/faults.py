@@ -1,6 +1,6 @@
 """Deterministic, seeded fault-injection harness for the serving stack.
 
-Four fault classes, mirroring the failure modes a production MoE
+Step-level fault classes, mirroring the failure modes a production MoE
 deployment actually sees (host hiccups, device numerics, cache-surgery
 races, stalled dispatch):
 
@@ -19,10 +19,31 @@ races, stalled dispatch):
                   (device preemption / collective stall); trips the
                   step-time watchdog.
 
+Process-level fault classes (the crash-tolerance layer's adversaries —
+serving/frontdoor.py + serving/journal.py):
+
+  crash_before_snapshot — the process dies just before snapshot number
+                  `step` is written (SimulatedCrash raised from the
+                  front door's before_snapshot hook): recovery must
+                  come from an OLDER snapshot + journal tail, or from
+                  the journal alone.
+  crash_mid_round — the process dies entering fused decode round
+                  `step`: every in-flight request's device state is
+                  lost; only the journal + last snapshot survive.
+  journal_torn_write — the crash tears the journal's final record:
+                  `nbytes` bytes of the first unflushed record land on
+                  disk (JournalWriter.abandon). The journal reader must
+                  log-and-skip the torn tail, not crash.
+
+A SimulatedCrash deliberately subclasses ServingError but NOT
+TransientFault: the watchdog must never retry it — it propagates out of
+the serve loop like the process death it stands in for.
+
 Faults are specified explicitly (fully deterministic) or drawn from a
 seeded RNG (`sample_campaign`) — either way a campaign replays
 bit-identically, which is what lets tests assert that co-batched
-requests are token-exact against a fault-free run.
+requests are token-exact against a fault-free run and that two runs of
+the same campaign seed produce identical survival/reason counts.
 
 Every delivered fault is appended to ``injector.log`` as
 ``(kind, target, detail)`` so campaigns can assert delivery.
@@ -31,18 +52,29 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import List, Optional, Set, Tuple
 
 import numpy as np
 
-from repro.serving.errors import TransientFault
+from repro.serving.errors import ServingError, TransientFault
 
-KINDS = ("slow_prefill", "nan_logits", "insert_fail", "stall_decode")
+STEP_KINDS = ("slow_prefill", "nan_logits", "insert_fail", "stall_decode")
+PROCESS_KINDS = ("crash_before_snapshot", "crash_mid_round",
+                 "journal_torn_write")
+KINDS = STEP_KINDS + PROCESS_KINDS
 
 
 class InjectedFault(TransientFault):
     """A fault raised by the injector (retryable by the watchdog)."""
     code = "injected_fault"
+
+
+class SimulatedCrash(ServingError):
+    """Process death, delivered as an exception: NOT retryable (not a
+    TransientFault) — it unwinds the serve loop the way a SIGKILL
+    unwinds the process. The front door's crash path (journal abandon,
+    stream abort) is exercised by catching exactly this."""
+    code = "simulated_crash"
 
 
 @dataclass
@@ -53,6 +85,9 @@ class Fault:
     nan_logits:   slot, step (global decode-step index)
     insert_fail:  rid, times (attempts that fail)
     stall_decode: step (fused round index), delay_s
+    crash_before_snapshot: step (snapshot index)
+    crash_mid_round:       step (fused round index)
+    journal_torn_write:    nbytes (bytes of the torn record left on disk)
     """
     kind: str
     rid: int = -1
@@ -60,6 +95,7 @@ class Fault:
     step: int = -1
     delay_s: float = 0.0
     times: int = 1
+    nbytes: int = 0
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -68,10 +104,13 @@ class Fault:
 
 @dataclass
 class FaultInjector:
-    """Delivers a planned fault campaign into the scheduler's hooks."""
+    """Delivers a planned fault campaign into the scheduler's (and
+    front door's) hooks. Crash faults fire at most once per injector,
+    so a recovered incarnation reusing the plan does not re-die."""
     faults: List[Fault] = field(default_factory=list)
     log: List[Tuple[str, int, float]] = field(default_factory=list)
     _insert_attempts: dict = field(default_factory=dict)
+    _crashed: Set[str] = field(default_factory=set)
 
     # ----------------------------------------------------------- hooks ----
 
@@ -95,11 +134,29 @@ class FaultInjector:
                         f"injected insert failure rid={rid} attempt={n}")
 
     def before_round(self, round_idx: int) -> None:
-        """Called before fused decode round `round_idx`."""
+        """Called before fused decode round `round_idx`. Raises
+        SimulatedCrash when a crash_mid_round fault targets it."""
         for f in self.faults:
             if f.kind == "stall_decode" and f.step == round_idx:
                 self.log.append(("stall_decode", round_idx, f.delay_s))
                 time.sleep(f.delay_s)
+        for f in self.faults:
+            if f.kind == "crash_mid_round" and f.step == round_idx \
+                    and "crash_mid_round" not in self._crashed:
+                self._crashed.add("crash_mid_round")
+                self.log.append(("crash_mid_round", round_idx, 0.0))
+                raise SimulatedCrash(
+                    f"injected process crash entering round {round_idx}")
+
+    def before_snapshot(self, snap_idx: int) -> None:
+        """Called by the front door before writing snapshot `snap_idx`."""
+        for f in self.faults:
+            if f.kind == "crash_before_snapshot" and f.step == snap_idx \
+                    and "crash_before_snapshot" not in self._crashed:
+                self._crashed.add("crash_before_snapshot")
+                self.log.append(("crash_before_snapshot", snap_idx, 0.0))
+                raise SimulatedCrash(
+                    f"injected process crash before snapshot {snap_idx}")
 
     def nan_fault(self, step_lo: int, step_hi: int) -> Tuple[int, int]:
         """(slot, step-in-chunk) of the first nan_logits fault whose
@@ -112,18 +169,33 @@ class FaultInjector:
                 return f.slot, f.step - step_lo
         return -1, -1
 
+    def torn_tail_bytes(self) -> int:
+        """Bytes of torn journal prefix a crash leaves behind (0 = the
+        buffered tail vanishes cleanly). Consulted by the front door's
+        crash path when abandoning the journal."""
+        for f in self.faults:
+            if f.kind == "journal_torn_write":
+                self.log.append(("journal_torn_write", -1,
+                                 float(f.nbytes)))
+                return f.nbytes
+        return 0
+
 
 def sample_campaign(seed: int, *, num_requests: int, num_slots: int,
                     horizon_steps: int,
                     p_slow: float = 0.25, p_nan: float = 0.5,
                     p_insert: float = 0.25, p_stall: float = 0.5,
+                    p_crash: float = 0.0,
                     delay_s: float = 0.02,
                     insert_times: Optional[int] = None) -> FaultInjector:
     """A reproducible mixed campaign drawn from one seeded RNG.
 
     Each fault class fires independently with its probability; targets
     (rid / slot / step) are drawn uniformly over the campaign extent.
-    The same seed always yields the same campaign.
+    The same seed always yields the same campaign. Crash faults
+    (p_crash; drawn AFTER the step-level classes so pre-existing seeds
+    keep their exact plans) pair a crash_mid_round with a 50% chance of
+    a journal_torn_write.
     """
     rng = np.random.default_rng(seed)
     faults: List[Fault] = []
@@ -145,4 +217,11 @@ def sample_campaign(seed: int, *, num_requests: int, num_slots: int,
                             step=int(rng.integers(1, max(
                                 2, horizon_steps // 4))),
                             delay_s=delay_s))
+    if rng.random() < p_crash:
+        faults.append(Fault("crash_mid_round",
+                            step=int(rng.integers(1, max(
+                                2, horizon_steps // 2)))))
+        if rng.random() < 0.5:
+            faults.append(Fault("journal_torn_write",
+                                nbytes=int(rng.integers(1, 16))))
     return FaultInjector(faults=faults)

@@ -631,32 +631,54 @@ class Scheduler:
             if st is not None:
                 self._finish(st, slot=slot, reason=reason)
 
-    def run(self, *, max_wall_s: Optional[float] = None
+    def run(self, *, max_wall_s: Optional[float] = None,
+            keep_alive: Optional[Callable[[], bool]] = None
             ) -> List[RequestState]:
         """Serve every submitted request to a terminal state. Arrival
         times are honored against the wall clock (arrival_s is relative
         to this call). max_wall_s bounds the serve loop: on expiry every
         unfinished request is shed (reason "run_wall_timeout") so run()
         is guaranteed to return even under a fault campaign. Returns
-        RequestStates in submission order."""
+        RequestStates in submission order.
+
+        keep_alive — the front door's pump (serving/frontdoor.py):
+        called once per loop iteration BEFORE admission, it may submit
+        or cancel requests (the scheduler is single-threaded; this is
+        the one sanctioned re-entry point alongside on_round) and its
+        return value keeps the loop alive while True even with nothing
+        queued or running, so an open door can idle-wait for traffic.
+        Without it the loop exits exactly as before — when all
+        submitted work is terminal."""
         self._t0 = time.perf_counter()
         self.wall_s = 0.0
         self._incoming.sort(key=lambda s: s.req.arrival_s)
-        while self._incoming or self._queue or self._active.any():
+        while True:
+            alive = bool(keep_alive()) if keep_alive is not None else False
+            if not (self._incoming or self._queue or self._active.any()
+                    or alive):
+                break
             now = self._now()
             if max_wall_s is not None and now > max_wall_s:
                 self._shed_all(REASON_WALL)
                 break
-            while self._incoming and \
-                    self._incoming[0].req.arrival_s <= now:
-                self._queue.append(self._incoming.pop(0))
+            if self._incoming:
+                # keep_alive() may have appended out of arrival order;
+                # promote every due request (a filter preserves the
+                # sorted order of the initial batch)
+                due = [s for s in self._incoming if s.req.arrival_s <= now]
+                if due:
+                    self._incoming = [s for s in self._incoming
+                                      if s.req.arrival_s > now]
+                    self._queue.extend(due)
             self._update_degradation(now)
             self._fill_slots(now)
             if self._active.any():
                 self._decode_round()
             elif self._incoming:
-                time.sleep(min(
-                    0.01, max(0.0, self._incoming[0].req.arrival_s - now)))
+                time.sleep(min(0.01, max(0.0, min(
+                    s.req.arrival_s for s in self._incoming) - now)))
+            elif alive:
+                time.sleep(0.001)     # open door, no traffic: idle poll
             if self.invariants:
                 self.check_invariants()
         self.wall_s = time.perf_counter() - self._t0

@@ -1,0 +1,107 @@
+"""Round-trip fidelity for checkpoint/ckpt.py.
+
+The serving crash-tolerance layer (serving/journal.py snapshots) now
+depends on checkpoints restoring EXACTLY what was saved — shape, value,
+and dtype — across jax and host-numpy trees, bfloat16 included.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (load_checkpoint, restore_checkpoint,
+                              save_checkpoint)
+
+
+def tree_paths(tree):
+    return jax.tree_util.tree_flatten_with_path(tree)[0]
+
+
+@pytest.fixture
+def nested_tree():
+    return {
+        "w_bf16": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3) / 3,
+        "b_f32": jnp.linspace(0, 1, 5, dtype=jnp.float32),
+        "layers": {
+            "i32": jnp.arange(4, dtype=jnp.int32),
+            "f16": jnp.full((2, 2), 0.5, jnp.float16),
+            "stack": [jnp.ones((2, 2)), jnp.zeros((3,))],
+        },
+        "host": {
+            "i64": np.arange(3, dtype=np.int64) * 2**40,
+            "f64": np.array([1e-12, np.pi], np.float64),
+            "mask": np.array([True, False, True]),
+            "empty": np.zeros((0,), np.int32),
+        },
+    }
+
+
+def test_round_trip_values_shapes_dtypes(tmp_path, nested_tree):
+    path = os.path.join(tmp_path, "ck")
+    save_checkpoint(path, nested_tree, step=3, extra={"tag": "t"})
+    restored = restore_checkpoint(path, nested_tree)
+    for (pa, a), (pb, b) in zip(tree_paths(nested_tree),
+                                tree_paths(restored)):
+        assert pa == pb
+        assert np.shape(a) == np.shape(b), pa
+        assert np.asarray(a).dtype == np.asarray(b).dtype, pa
+        # compare in f32 so bf16 comparisons are exact-by-cast
+        np.testing.assert_array_equal(
+            np.asarray(jnp.asarray(a, jnp.float32)),
+            np.asarray(jnp.asarray(b, jnp.float32)), err_msg=str(pa))
+
+
+def test_bfloat16_exact_bits(tmp_path):
+    """bf16 is stored as its f32 upcast (npz has no bf16) and must come
+    back bit-exact: f32 holds every bf16 value exactly."""
+    x = {"p": jnp.asarray(
+        np.random.default_rng(0).standard_normal((16, 8)), jnp.bfloat16)}
+    path = os.path.join(tmp_path, "bf16")
+    save_checkpoint(path, x)
+    r = restore_checkpoint(path, x)
+    assert r["p"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(x["p"]).view(np.uint16),
+        np.asarray(r["p"]).view(np.uint16))
+
+
+def test_host_numpy_64bit_dtypes_survive(tmp_path):
+    """Host numpy trees (serving snapshots, optimizer counters) must NOT
+    be clamped to 32-bit by the x64-disabled jax default."""
+    tree = {"slots": np.array([2**40, -1, 7], np.int64),
+            "t": np.array([1.5e300], np.float64)}
+    path = os.path.join(tmp_path, "host")
+    save_checkpoint(path, tree)
+    r = restore_checkpoint(path, tree)
+    assert r["slots"].dtype == np.int64
+    assert r["t"].dtype == np.float64
+    np.testing.assert_array_equal(r["slots"], tree["slots"])
+    np.testing.assert_array_equal(r["t"], tree["t"])
+
+
+def test_load_checkpoint_flat(tmp_path, nested_tree):
+    """Target-free loading (the snapshot layer's entry point): flat
+    path-keyed arrays + the JSON sidecar."""
+    path = os.path.join(tmp_path, "flat")
+    save_checkpoint(path, nested_tree, step=9, extra={"seq": 4})
+    flat, meta = load_checkpoint(path)
+    assert meta["step"] == 9 and meta["extra"]["seq"] == 4
+    assert set(meta["keys"]) == set(flat)
+    np.testing.assert_array_equal(
+        flat["layers/i32"], np.asarray(nested_tree["layers"]["i32"]))
+    np.testing.assert_array_equal(
+        flat["host/i64"], nested_tree["host"]["i64"])
+    # sidecar dtype record distinguishes the bf16 upcast
+    assert meta["dtypes"]["w_bf16"] == "float32"
+    assert meta["dtypes"]["host/i64"] == "int64"
+
+
+def test_restore_shape_mismatch_fails_loudly(tmp_path, nested_tree):
+    path = os.path.join(tmp_path, "mismatch")
+    save_checkpoint(path, nested_tree)
+    bad = jax.tree_util.tree_map(lambda x: x, nested_tree)
+    bad["b_f32"] = jnp.zeros((7,), jnp.float32)
+    with pytest.raises(AssertionError):
+        restore_checkpoint(path, bad)

@@ -177,6 +177,7 @@ def test_insert_fault_permanent_sheds(engine, moe_setup):
 
 # ------------------------------------------------- watchdog / slow paths --
 
+@pytest.mark.slow          # wall-clock-sensitive: asserts on real delays
 def test_watchdog_counts_stalls(engine, moe_setup):
     cfg, params, prompts = moe_setup
     inj = FaultInjector([Fault("slow_prefill", rid=0, delay_s=0.05),
@@ -409,3 +410,48 @@ def test_seeded_campaign_reproducible_and_leak_free(engine, moe_setup):
     reasons = sched.reason_counts()
     assert sum(reasons.values()) == 5
     assert set(reasons) <= {REASON_COMPLETED, REASON_NUMERICS, REASON_FAULT}
+
+
+def test_campaign_outcomes_deterministic(engine, moe_setup):
+    """Same sample_campaign seed -> identical survival/reason counts
+    across two independent serves. No deadlines and no watchdog in the
+    loop, so the outcome depends only on the (deterministic) fault plan
+    — not on wall-clock speed."""
+    _, _, prompts = moe_setup
+    counts = []
+    for _ in range(2):
+        camp = sample_campaign(25, num_requests=5, num_slots=2,
+                               horizon_steps=20, delay_s=0.0)
+        sched = engine.make_scheduler(num_slots=2, faults=camp,
+                                      invariants=True, max_retries=2,
+                                      retry_backoff_s=0.0)
+        for i in range(5):
+            sched.submit(prompts[i % 3], 8)
+        sched.run(max_wall_s=60.0)
+        drained(sched)
+        counts.append(dict(sched.reason_counts()))
+    assert counts[0] == counts[1]
+    assert sum(counts[0].values()) == 5
+
+
+def test_crash_campaign_plan_deterministic():
+    """Crash-fault sampling (p_crash) replays bit-identically and pairs
+    crash_mid_round with an optional journal_torn_write; existing seeds
+    keep their exact pre-crash plans (crash draws come last)."""
+    a = sample_campaign(3, num_requests=4, num_slots=2, horizon_steps=16,
+                        p_crash=1.0)
+    b = sample_campaign(3, num_requests=4, num_slots=2, horizon_steps=16,
+                        p_crash=1.0)
+    assert a.faults == b.faults
+    kinds = [f.kind for f in a.faults]
+    assert "crash_mid_round" in kinds
+    assert kinds.index("crash_mid_round") > max(
+        (i for i, k in enumerate(kinds) if k in
+         ("slow_prefill", "nan_logits", "insert_fail", "stall_decode")),
+        default=-1)
+    # p_crash=0 (the default) leaves the legacy plan untouched
+    legacy = sample_campaign(3, num_requests=4, num_slots=2,
+                             horizon_steps=16)
+    assert legacy.faults == [f for f in a.faults
+                             if f.kind not in ("crash_mid_round",
+                                               "journal_torn_write")]

@@ -1,0 +1,258 @@
+"""Crash-tolerant front door: streaming, cancellation, drain,
+error-taxonomy surfacing, and kill-and-recover replay.
+
+The ISSUE-8 acceptance criteria live here:
+  * the kill-and-recover path loses ZERO admitted requests;
+  * greedy streams are bit-identical to an uninterrupted run
+    (replay fidelity 1.0);
+  * recovery works from snapshot + journal tail, from the journal
+    alone (crash_before_snapshot), and across a torn journal tail.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.models import init_params
+from repro.serving import (DeadlineExceeded, Engine, Fault, FaultInjector,
+                           FrontDoor, InvalidRequest, QueueFull,
+                           RequestCancelled, ShuttingDown, SimulatedCrash,
+                           read_journal, recover)
+from repro.serving.errors import REASON_CANCELLED, REASON_COMPLETED
+
+
+def small(name, **kw):
+    return ARCHS[name].reduced(num_layers=2, max_d_model=128,
+                               max_vocab=256, **kw)
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = small("granite-moe-1b-a400m")
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(2), (3, 12), 0, cfg.vocab_size))
+    return cfg, params, prompts
+
+
+@pytest.fixture(scope="module")
+def engine(moe_setup):
+    cfg, params, _ = moe_setup
+    return Engine(cfg, params, cache_len=128, decode_chunk=4)
+
+
+def stream_tokens(stream):
+    return np.asarray([int(t) for t in stream.tokens])
+
+
+# ----------------------------------------------------------- streaming ----
+
+def test_streaming_token_exact(engine, moe_setup):
+    """Tokens consumed live off the streams are bit-identical to the
+    batch generate() reference, and drain() leaves everything terminal."""
+    _, _, prompts = moe_setup
+    free, _ = engine.generate(prompts, 12)
+    door = engine.make_frontdoor(num_slots=2)
+    streams = [door.submit(prompts[b], 12) for b in range(3)]
+    live = list(streams[0])                 # consume one stream as it runs
+    assert len(live) == 12
+    out = door.drain(timeout=120.0)
+    assert out == streams and door.crashed is None
+    for b, s in enumerate(streams):
+        assert s.finish_reason == REASON_COMPLETED
+        np.testing.assert_array_equal(stream_tokens(s), free[b])
+        np.testing.assert_array_equal(s.result(timeout=1.0).ravel(),
+                                      free[b])
+
+
+def test_submit_validation_is_synchronous(engine, moe_setup):
+    _, _, prompts = moe_setup
+    door = engine.make_frontdoor(num_slots=1)
+    with pytest.raises(InvalidRequest):
+        door.submit(prompts[0], 0)
+    with pytest.raises(InvalidRequest):
+        door.submit(prompts[0], 500)        # exceeds cache_len
+    assert not door.streams                 # nothing recorded or journaled
+    door.drain(timeout=60.0)
+
+
+# ---------------------------------------------------------- cancellation --
+
+def test_mid_stream_cancel(engine, moe_setup):
+    """Cancel after consuming a couple of live tokens: the stream ends
+    with the cancelled reason, keeps an exact partial prefix, and
+    result() raises RequestCancelled."""
+    _, _, prompts = moe_setup
+    free, _ = engine.generate(prompts[:1], 48)
+    door = engine.make_frontdoor(num_slots=1)
+    stream = door.submit(prompts[0], 48)
+    it = iter(stream)
+    got = [next(it), next(it)]
+    assert door.cancel(stream.rid)
+    rest = list(it)                         # drains to the end marker
+    door.drain(timeout=120.0)
+    assert stream.finish_reason == REASON_CANCELLED
+    n = len(got) + len(rest)
+    assert 2 <= n < 48
+    np.testing.assert_array_equal(stream_tokens(stream), free[0][:n])
+    with pytest.raises(RequestCancelled):
+        stream.result(timeout=1.0)
+    assert not door.cancel(stream.rid)      # already terminal
+    assert not door.cancel(999)             # unknown rid
+
+
+# ------------------------------------------------------------- drain ------
+
+def test_drain_closes_admissions(engine, moe_setup):
+    _, _, prompts = moe_setup
+    door = engine.make_frontdoor(num_slots=1)
+    door.submit(prompts[0], 4)
+    door.drain(timeout=120.0)
+    with pytest.raises(ShuttingDown):
+        door.submit(prompts[1], 4)
+    # drain is idempotent
+    assert len(door.drain(timeout=1.0)) == 1
+
+
+# ----------------------------------------------------- taxonomy surface ---
+
+def test_overload_reject_surfaces_queue_full(engine, moe_setup):
+    """overload='reject' refusals surface as QueueFull from result().
+    The door is started only after all submits are inboxed, so the
+    admission order (hog -> queue, rest -> refused) is deterministic."""
+    _, _, prompts = moe_setup
+    door = FrontDoor(engine, num_slots=1, max_queue=1, overload="reject")
+    hog = door.submit(prompts[0], 16)
+    r1 = door.submit(prompts[1], 8)
+    r2 = door.submit(prompts[2], 8)
+    door.start()
+    door.drain(timeout=120.0)
+    assert hog.finish_reason == REASON_COMPLETED
+    for r in (r1, r2):
+        assert r.finish_reason == "shed_queue"
+        with pytest.raises(QueueFull):
+            r.result(timeout=1.0)
+
+
+def test_ttft_deadline_surfaces_deadline_exceeded(engine, moe_setup):
+    _, _, prompts = moe_setup
+    door = engine.make_frontdoor(num_slots=1)
+    hog = door.submit(prompts[0], 48)
+    late = door.submit(prompts[1], 8, ttft_deadline_s=1e-4)
+    door.drain(timeout=120.0)
+    assert hog.finish_reason == REASON_COMPLETED
+    assert late.finish_reason == "deadline_ttft"
+    with pytest.raises(DeadlineExceeded):
+        late.result(timeout=1.0)
+
+
+# ------------------------------------------------------ kill + recover ----
+
+def test_kill_and_recover_bit_identical(engine, moe_setup, tmp_path):
+    """The tentpole guarantee: crash mid-round with a torn journal
+    write, recover from snapshot + journal tail, and every admitted
+    request finishes with a stream bit-identical to the uninterrupted
+    run — zero lost requests, replay fidelity 1.0."""
+    _, _, prompts = moe_setup
+    free, _ = engine.generate(prompts, 12)
+    jp = os.path.join(tmp_path, "wal.journal")
+    sp = os.path.join(tmp_path, "snap")
+    inj = FaultInjector([Fault("crash_mid_round", step=2),
+                         Fault("journal_torn_write", nbytes=7)])
+    door = FrontDoor(engine, num_slots=2, journal_path=jp,
+                     snapshot_path=sp, snapshot_every_rounds=1,
+                     faults=inj).start()
+    streams = [door.submit(prompts[b], 12) for b in range(3)]
+    door.drain(timeout=120.0)
+    assert isinstance(door.crashed, SimulatedCrash)
+    assert door.snapshots_written >= 1
+    # crash aborts, never silently hangs: every stream is terminal
+    for s in streams:
+        assert s.done
+        if s.finish_reason is None:
+            assert s.error is door.crashed
+
+    door2, report = recover(engine, journal_path=jp, snapshot_path=sp,
+                            num_slots=2)
+    # zero lost admitted requests
+    assert report.requests == 3
+    assert report.resumed + report.terminal == 3
+    assert report.snapshot_used
+    door2.drain(timeout=120.0)
+    assert door2.crashed is None
+    for b in range(3):
+        s = door2.streams[b]
+        assert s.finish_reason == REASON_COMPLETED
+        np.testing.assert_array_equal(stream_tokens(s), free[b])
+    stats = door2.replay_stats()
+    assert stats["mismatches"] == 0 and stats["fidelity"] == 1.0
+    # the journal is whole again: recovery truncated the torn fragment
+    # and the new incarnation's records (finishes) are all readable
+    tail = read_journal(jp)
+    assert not tail.torn
+    finished = {r["rid"] for r in tail.records if r["t"] == "finish"}
+    assert finished == {0, 1, 2}
+
+
+def test_crash_before_snapshot_recovers_from_journal_alone(
+        engine, moe_setup, tmp_path):
+    """The crash lands BEFORE the first snapshot is written: recovery
+    has only the journal — still zero lost requests, still exact."""
+    _, _, prompts = moe_setup
+    free, _ = engine.generate(prompts[:2], 10)
+    jp = os.path.join(tmp_path, "wal.journal")
+    sp = os.path.join(tmp_path, "snap")
+    inj = FaultInjector([Fault("crash_before_snapshot", step=0)])
+    door = FrontDoor(engine, num_slots=2, journal_path=jp,
+                     snapshot_path=sp, snapshot_every_rounds=1,
+                     fsync_every=1, faults=inj).start()
+    for b in range(2):
+        door.submit(prompts[b], 10)
+    door.drain(timeout=120.0)
+    assert isinstance(door.crashed, SimulatedCrash)
+    assert door.snapshots_written == 0
+    assert not os.path.exists(sp + ".npz")
+
+    door2, report = recover(engine, journal_path=jp, snapshot_path=sp,
+                            num_slots=2)
+    assert not report.snapshot_used and report.requests == 2
+    door2.drain(timeout=120.0)
+    for b in range(2):
+        s = door2.streams[b]
+        assert s.finish_reason == REASON_COMPLETED
+        np.testing.assert_array_equal(stream_tokens(s), free[b])
+    assert door2.replay_stats()["mismatches"] == 0
+
+
+def test_torn_tail_recovery_no_snapshot(engine, moe_setup, tmp_path):
+    """Large fsync batch + no snapshots: the crash loses every buffered
+    token record and tears the next one. Recovery sees the torn tail,
+    truncates it, and regenerates the full streams from the durable
+    submit records alone."""
+    _, _, prompts = moe_setup
+    free, _ = engine.generate(prompts[:2], 10)
+    jp = os.path.join(tmp_path, "wal.journal")
+    inj = FaultInjector([Fault("crash_mid_round", step=1),
+                         Fault("journal_torn_write", nbytes=6)])
+    door = FrontDoor(engine, num_slots=2, journal_path=jp,
+                     fsync_every=64, faults=inj).start()
+    for b in range(2):
+        door.submit(prompts[b], 10)
+    door.drain(timeout=120.0)
+    assert isinstance(door.crashed, SimulatedCrash)
+    pre = read_journal(jp)
+    assert pre.torn                         # fragment really on disk
+    assert {r["t"] for r in pre.records} == {"submit"}
+
+    door2, report = recover(engine, journal_path=jp, num_slots=2)
+    assert report.torn_tail and not report.snapshot_used
+    assert report.resumed == 2
+    door2.drain(timeout=120.0)
+    for b in range(2):
+        s = door2.streams[b]
+        assert s.finish_reason == REASON_COMPLETED
+        assert s.replayed == 0              # nothing durable to replay
+        np.testing.assert_array_equal(stream_tokens(s), free[b])
+    assert not read_journal(jp).torn

@@ -1,0 +1,251 @@
+"""serving/journal.py: CRC framing, fsync batching, torn-write
+tolerance, snapshot atomicity, and idempotent record folding.
+
+All host-side — no model, no jit. These lock down the durability
+semantics the crash-recovery path (serving/frontdoor.recover) rests on.
+"""
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from repro.serving.journal import (JournalWriter, Snapshot, fold_records,
+                                   last_snapshot_record, load_snapshot,
+                                   read_journal, save_snapshot)
+
+
+def wal(tmp_path, name="wal.journal"):
+    return os.path.join(tmp_path, name)
+
+
+# ------------------------------------------------------------ framing ------
+
+def test_append_read_round_trip(tmp_path):
+    p = wal(tmp_path)
+    w = JournalWriter(p, fsync_every=4)
+    w.append("submit", rid=0, prompt=[1, 2, 3], max_new=8, arrival_s=0.0)
+    w.append("token", rid=0, i=0, tok=[5])
+    w.append("token", rid=0, i=1, tok=[6, 7])
+    w.append("finish", rid=0, reason="completed")
+    w.close()
+    tail = read_journal(p)
+    assert not tail.torn
+    assert [r["t"] for r in tail.records] == ["submit", "token", "token",
+                                              "finish"]
+    assert [r["seq"] for r in tail.records] == [0, 1, 2, 3]
+    assert tail.records[2]["tok"] == [6, 7]
+    assert tail.valid_bytes == os.path.getsize(p)
+
+
+def test_read_missing_file_is_empty(tmp_path):
+    tail = read_journal(wal(tmp_path, "nope.journal"))
+    assert tail.records == [] and not tail.torn and tail.last_seq == -1
+
+
+def test_start_seq_continues_numbering(tmp_path):
+    """Recovery reopens the journal with start_seq past the old tail so
+    seqs stay monotonic across incarnations."""
+    p = wal(tmp_path)
+    w = JournalWriter(p)
+    w.append("submit", rid=0, prompt=[1], max_new=2, arrival_s=0.0)
+    w.close()
+    w2 = JournalWriter(p, start_seq=read_journal(p).last_seq + 1)
+    w2.append("finish", rid=0, reason="completed")
+    w2.close()
+    seqs = [r["seq"] for r in read_journal(p).records]
+    assert seqs == [0, 1]
+
+
+# ----------------------------------------------------- fsync batching ------
+
+def test_token_records_batch_lifecycle_syncs_now(tmp_path):
+    p = wal(tmp_path)
+    w = JournalWriter(p, fsync_every=100)
+    w.append("token", rid=0, i=0, tok=[1])
+    w.append("token", rid=0, i=1, tok=[2])
+    assert read_journal(p).records == []          # still buffered
+    w.append("finish", rid=0, reason="completed")  # DURABLE_NOW -> flush
+    assert len(read_journal(p).records) == 3
+    w.close()
+
+
+def test_abandon_loses_unflushed_tail(tmp_path):
+    """abandon() models the crash: buffered records are gone, flushed
+    ones survive. This is exactly the loss recovery must tolerate."""
+    p = wal(tmp_path)
+    w = JournalWriter(p, fsync_every=100)
+    w.append("submit", rid=0, prompt=[1], max_new=4, arrival_s=0.0)  # syncs
+    w.append("token", rid=0, i=0, tok=[9])     # buffered
+    w.append("token", rid=0, i=1, tok=[8])     # buffered
+    dropped = w.abandon()
+    assert dropped == 2
+    tail = read_journal(p)
+    assert not tail.torn
+    assert [r["t"] for r in tail.records] == ["submit"]
+
+
+# ------------------------------------------------------ torn tolerance -----
+
+def test_abandon_with_torn_prefix(tmp_path):
+    """A crash mid-write leaves a strict prefix of one record on disk;
+    the reader logs-and-skips it and keeps everything before."""
+    p = wal(tmp_path)
+    w = JournalWriter(p, fsync_every=100)
+    w.append("submit", rid=0, prompt=[1, 2], max_new=4, arrival_s=0.0)
+    w.append("token", rid=0, i=0, tok=[3])
+    w.abandon(torn_bytes=5)
+    tail = read_journal(p)
+    assert tail.torn
+    assert [r["t"] for r in tail.records] == ["submit"]
+    assert tail.valid_bytes < os.path.getsize(p)
+
+
+@pytest.mark.parametrize("cut", ["header", "payload"])
+def test_truncated_final_record_skipped(tmp_path, cut):
+    p = wal(tmp_path)
+    w = JournalWriter(p)
+    w.append("submit", rid=0, prompt=[1], max_new=4, arrival_s=0.0)
+    w.append("finish", rid=0, reason="completed")
+    w.close()
+    size = os.path.getsize(p)
+    full = read_journal(p)
+    assert len(full.records) == 2
+    # compute the last record's frame boundaries
+    last_start = full.valid_bytes
+    with open(p, "rb") as f:
+        data = f.read()
+    # find start of final record by re-walking
+    off = 0
+    while True:
+        length, _ = struct.unpack_from("<II", data, off)
+        end = off + 8 + length
+        if end >= size:
+            break
+        off = end
+    trunc = off + 3 if cut == "header" else off + 8 + 2
+    with open(p, "r+b") as f:
+        f.truncate(trunc)
+    tail = read_journal(p)
+    assert tail.torn
+    assert [r["t"] for r in tail.records] == ["submit"]
+    assert tail.valid_bytes == off
+    assert last_start == size
+
+
+def test_crc_mismatch_skipped(tmp_path):
+    p = wal(tmp_path)
+    w = JournalWriter(p)
+    w.append("submit", rid=0, prompt=[1], max_new=4, arrival_s=0.0)
+    w.append("finish", rid=0, reason="completed")
+    w.close()
+    with open(p, "r+b") as f:
+        f.seek(-1, os.SEEK_END)
+        last = f.read(1)
+        f.seek(-1, os.SEEK_END)
+        f.write(bytes([last[0] ^ 0xFF]))   # flip bits in final payload
+    tail = read_journal(p)
+    assert tail.torn
+    assert [r["t"] for r in tail.records] == ["submit"]
+
+
+# ---------------------------------------------------------- snapshots ------
+
+def snap_fixture():
+    return Snapshot(
+        requests={
+            0: {"prompt": np.array([1, 2, 3], np.int32),
+                "tokens": [7, 8], "max_new": 8, "reason": None,
+                "arrival_s": 0.0},
+            1: {"prompt": np.array([4], np.int32), "tokens": [],
+                "max_new": 4, "reason": "completed", "arrival_s": 0.5},
+        },
+        queue=[0], rng_key=np.array([0, 42], np.uint32),
+        slot_rids=np.array([0, -1], np.int64),
+        slot_cur_len=np.array([5, 0], np.int64),
+        next_rid=2, seq=11, total_steps=3, round_idx=2)
+
+
+def test_snapshot_round_trip(tmp_path):
+    path = os.path.join(tmp_path, "snap")
+    snap = snap_fixture()
+    save_snapshot(path, snap)
+    got = load_snapshot(path)
+    assert got is not None
+    assert set(got.requests) == {0, 1}
+    np.testing.assert_array_equal(got.requests[0]["prompt"], [1, 2, 3])
+    assert [int(t) for t in got.requests[0]["tokens"]] == [7, 8]
+    assert got.requests[1]["tokens"] == []
+    assert got.requests[1]["reason"] == "completed"
+    assert got.queue == [0] and got.next_rid == 2 and got.seq == 11
+    np.testing.assert_array_equal(got.rng_key, snap.rng_key)
+    np.testing.assert_array_equal(got.slot_rids, [0, -1])
+    assert got.slot_cur_len.dtype == np.int64
+
+
+def test_snapshot_absent_or_corrupt_returns_none(tmp_path):
+    assert load_snapshot(os.path.join(tmp_path, "missing")) is None
+    bad = os.path.join(tmp_path, "bad")
+    with open(bad + ".npz", "wb") as f:
+        f.write(b"not a zipfile")
+    assert load_snapshot(bad) is None          # logged, not raised
+
+
+def test_snapshot_overwrite_is_atomic_no_tmp_left(tmp_path):
+    path = os.path.join(tmp_path, "snap")
+    save_snapshot(path, snap_fixture())
+    save_snapshot(path, snap_fixture())        # overwrite the good one
+    names = set(os.listdir(tmp_path))
+    assert names == {"snap.npz", "snap.json"}  # no .tmp residue
+
+
+# ------------------------------------------------------------ folding ------
+
+def _recs():
+    return [
+        {"seq": 0, "t": "submit", "rid": 0, "prompt": [1, 2], "max_new": 4,
+         "arrival_s": 0.0},
+        {"seq": 1, "t": "token", "rid": 0, "i": 0, "tok": [5, 6]},
+        {"seq": 2, "t": "token", "rid": 0, "i": 2, "tok": [7]},
+        {"seq": 3, "t": "finish", "rid": 0, "reason": "completed"},
+    ]
+
+
+def test_fold_is_idempotent(tmp_path):
+    once = fold_records(_recs())
+    twice = fold_records(_recs() + _recs())
+    assert once[0]["tokens"] == [5, 6, 7] == twice[0]["tokens"]
+    assert once[0]["reason"] == "completed" == twice[0]["reason"]
+
+
+def test_fold_over_snapshot_base_converges(tmp_path):
+    """Replaying the FULL journal over a snapshot that already contains
+    a prefix of the tokens converges (absolute token indices)."""
+    base = Snapshot(requests={0: {"prompt": np.array([1, 2]),
+                                  "tokens": [5], "max_new": 4,
+                                  "reason": None, "arrival_s": 0.0}})
+    table = fold_records(_recs(), base)
+    assert table[0]["tokens"] == [5, 6, 7]
+
+
+def test_fold_token_gap_skipped_and_cancel_flag():
+    recs = [
+        {"seq": 0, "t": "submit", "rid": 1, "prompt": [9], "max_new": 4,
+         "arrival_s": 0.0},
+        {"seq": 1, "t": "token", "rid": 1, "i": 3, "tok": [1]},  # gap
+        {"seq": 2, "t": "token", "rid": 7, "i": 0, "tok": [1]},  # unknown
+        {"seq": 3, "t": "cancel", "rid": 1},
+    ]
+    table = fold_records(recs)
+    assert table[1]["tokens"] == []            # gap record dropped
+    assert 7 not in table
+    assert table[1].get("cancel_requested") is True
+
+
+def test_last_snapshot_record():
+    recs = [{"seq": 0, "t": "submit", "rid": 0, "prompt": [1],
+             "max_new": 1, "arrival_s": 0.0},
+            {"seq": 1, "t": "snapshot", "round": 1},
+            {"seq": 2, "t": "snapshot", "round": 2}]
+    assert last_snapshot_record(recs)["round"] == 2
+    assert last_snapshot_record(recs[:1]) is None
