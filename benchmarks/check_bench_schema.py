@@ -70,6 +70,7 @@ SPECS: Dict[str, Dict[str, Callable[[Any], bool]]] = {
         "robustness.campaigns": lambda v: isinstance(v, list) and v,
         # the crash-tolerance acceptance criteria, machine-checked
         "robustness.kill_recover.lost_requests": _is(0),
+        "robustness.kill_recover.corrupt_gaps": _is(0),
         "robustness.kill_recover.bit_identical": _is(True),
         "robustness.kill_recover.replay_fidelity": _num(0.0, 1.0),
         "robustness.kill_recover.recovery_wall_s": _num(lo=0.0),

@@ -235,6 +235,7 @@ def _kill_recover_run(eng: Engine, prompts, *, free: np.ndarray,
         "crash_round": crash_round,
         "durable_tokens_at_crash": durable_tokens,
         "torn_tail": report.torn_tail,
+        "corrupt_gaps": report.corrupt_gaps,
         "snapshot_used": report.snapshot_used,
         "journal_records": report.journal_records,
         "resumed": report.resumed,

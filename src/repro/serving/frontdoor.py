@@ -55,8 +55,8 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.errors import (DeadlineUnmeetable, QueueFull,
-                                  ShuttingDown, error_for_reason,
+from repro.serving.errors import (REASON_WALL, DeadlineUnmeetable,
+                                  QueueFull, ShuttingDown, error_for_reason,
                                   validate_request)
 from repro.serving.journal import (JournalWriter, Snapshot, fold_records,
                                    load_snapshot, read_journal,
@@ -154,6 +154,8 @@ class RecoveryReport:
     terminal: int = 0            # already finished — reported, not replayed
     resumed: int = 0             # unfinished — resubmitted for replay
     torn_tail: bool = False      # journal ended in a truncated record
+    corrupt_gaps: int = 0        # rids with a mid-file token gap (corrupt
+                                 # journal; resumed from consistent prefix)
     snapshot_used: bool = False
     snapshot_round: int = -1
     journal_records: int = 0
@@ -261,7 +263,9 @@ class FrontDoor:
             stream = self.streams.get(rid)
             if stream is None or stream.done:
                 return False
-            if self.journal is not None:
+            # the crash path abandons (closes) the journal outside this
+            # lock — a cancel racing it must not append to a dead WAL
+            if self.journal is not None and not self.journal.closed:
                 self.journal.append("cancel", rid=rid)
             self._inbox.append(("cancel", rid))
         return True
@@ -283,35 +287,62 @@ class FrontDoor:
         if self.journal is not None and not self.journal.closed:
             self.journal.append("drain", reason="graceful")
             self.journal.close()
-        return [self.streams[r] for r in sorted(self.streams)]
+        return [s for _, s in self._streams_items()]
 
     def replay_stats(self) -> Dict[str, float]:
         """Replay-fidelity census across recovered streams."""
-        replayed = sum(s.replayed for s in self.streams.values())
-        mism = sum(s.replay_mismatch for s in self.streams.values())
+        streams = [s for _, s in self._streams_items()]
+        replayed = sum(s.replayed for s in streams)
+        mism = sum(s.replay_mismatch for s in streams)
         return {"replayed_tokens": replayed, "mismatches": mism,
                 "fidelity": 1.0 if replayed == 0
                 else 1.0 - mism / replayed}
 
     # -------------------------------------------------- serving thread ----
 
+    def _streams_items(self) -> List[Tuple[int, TokenStream]]:
+        """Point-in-time copy of the stream table, rid-sorted. Caller
+        threads insert under the lock, so every iteration — serving
+        thread or census — must copy under it too (a bare iteration
+        races dict resize)."""
+        with self._lock:
+            return sorted(self.streams.items())
+
     def _serve(self) -> None:
         try:
             self._sched.run(max_wall_s=self._max_wall_s,
                             keep_alive=self._tick)
+            with self._lock:
+                # close admissions BEFORE the final pump: a submit
+                # accepted after it would sit in the inbox unserved and
+                # its consumer would block forever
+                self._open = False
             self._tick()                   # final publish + finish sweep
+            # run() only returns with live streams via the max_wall_s
+            # guard (or a final-tick admit the loop never decoded):
+            # finish them as wall-shed so consumers never hang
+            for rid, stream in self._streams_items():
+                if not stream.done:
+                    if self.journal is not None and not self.journal.closed:
+                        self.journal.append("finish", rid=rid,
+                                            reason=REASON_WALL,
+                                            n_tokens=len(stream.tokens))
+                    stream._finish(REASON_WALL)
         except BaseException as e:         # noqa: BLE001 — crash path
             self.crashed = e
+            with self._lock:
+                self._open = False         # dead engine: refuse admissions
             if self.journal is not None and not self.journal.closed:
                 torn = self._faults.torn_tail_bytes() \
                     if self._faults is not None else 0
                 # a real SIGKILL loses the buffered tail; a torn write
                 # additionally leaves a partial record on disk
                 self.journal.abandon(torn_bytes=torn)
-            for stream in self.streams.values():
+            for _rid, stream in self._streams_items():
                 stream._abort(e)
         finally:
-            self._open = False
+            with self._lock:
+                self._open = False
 
     def _tick(self) -> bool:
         """The pump: runs in the serving thread once per scheduler loop
@@ -416,8 +447,7 @@ class FrontDoor:
                         total_steps=self._sched.total_steps,
                         round_idx=self._sched._round_idx,
                         rng_key=np.asarray(self._sched._key))
-        for rid in sorted(self.streams):
-            s = self.streams[rid]
+        for rid, s in self._streams_items():
             snap.requests[rid] = {"prompt": s.prompt,
                                   "tokens": list(s.tokens),
                                   "max_new": s.max_new_tokens,
@@ -464,6 +494,7 @@ def recover(engine, *, journal_path: str,
     table = fold_records(tail.records, base=snap)
     report = RecoveryReport(
         requests=len(table), torn_tail=tail.torn,
+        corrupt_gaps=sum(1 for r in table.values() if r.get("token_gap")),
         snapshot_used=snap is not None,
         snapshot_round=snap.round_idx if snap else -1,
         journal_records=len(tail.records))

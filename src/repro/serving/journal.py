@@ -38,6 +38,7 @@ import json
 import logging
 import os
 import struct
+import threading
 import zlib
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
@@ -64,6 +65,12 @@ class JournalWriter:
     lifecycle-critical record type (DURABLE_NOW) lands. A record is
     **durable** only once flushed — ``abandon()`` (simulated crash)
     drops the buffered tail exactly like a real kill would.
+
+    Thread-safe: the front door appends from caller threads (submit /
+    cancel) and from the serving thread (token / finish / snapshot)
+    concurrently, so every mutation holds an internal lock — without it
+    an append landing between flush()'s write and its buffer clear
+    would be silently dropped even though append() reported it durable.
     """
 
     def __init__(self, path: str, *, fsync_every: int = 8,
@@ -71,6 +78,7 @@ class JournalWriter:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         self.path = path
         self.fsync_every = fsync_every
+        self._lock = threading.RLock()      # append() flushes re-entrantly
         self._f: Optional[Any] = open(path, "ab")
         self._pending: List[bytes] = []
         self._seq = start_seq
@@ -80,7 +88,8 @@ class JournalWriter:
     @property
     def seq(self) -> int:
         """Sequence number the next record will carry."""
-        return self._seq
+        with self._lock:
+            return self._seq
 
     @property
     def closed(self) -> bool:
@@ -88,53 +97,57 @@ class JournalWriter:
 
     def append(self, rtype: str, **fields) -> int:
         """Buffer one record; flush per the fsync policy. Returns seq."""
-        if self._f is None:
-            raise ValueError("journal is closed")
-        rec = {"seq": self._seq, "t": rtype, **fields}
-        seq = self._seq
-        self._seq += 1
-        payload = json.dumps(rec, separators=(",", ":")).encode()
-        self._pending.append(
-            _HEADER.pack(len(payload), zlib.crc32(payload)) + payload)
-        if rtype in DURABLE_NOW or len(self._pending) >= self.fsync_every:
-            self.flush()
-        return seq
+        with self._lock:
+            if self._f is None:
+                raise ValueError("journal is closed")
+            rec = {"seq": self._seq, "t": rtype, **fields}
+            seq = self._seq
+            self._seq += 1
+            payload = json.dumps(rec, separators=(",", ":")).encode()
+            self._pending.append(
+                _HEADER.pack(len(payload), zlib.crc32(payload)) + payload)
+            if rtype in DURABLE_NOW or len(self._pending) >= self.fsync_every:
+                self.flush()
+            return seq
 
     def flush(self) -> None:
         """Write + fsync everything buffered (records become durable)."""
-        if self._f is None:
-            return
-        if self._pending:
-            self._f.write(b"".join(self._pending))
-            self.records_flushed += len(self._pending)
-            self._pending.clear()
-        self._f.flush()
-        os.fsync(self._f.fileno())
-        self.syncs += 1
+        with self._lock:
+            if self._f is None:
+                return
+            if self._pending:
+                self._f.write(b"".join(self._pending))
+                self.records_flushed += len(self._pending)
+                self._pending.clear()
+            self._f.flush()
+            os.fsync(self._f.fileno())
+            self.syncs += 1
 
     def abandon(self, *, torn_bytes: int = 0) -> int:
         """Simulated crash: the buffered tail is LOST. With
         ``torn_bytes > 0`` a strict prefix of the first unflushed record
         is left on disk — the torn-write the reader must tolerate.
         Returns the number of records dropped."""
-        dropped = len(self._pending)
-        if self._f is not None:
-            if torn_bytes > 0 and self._pending:
-                frag = self._pending[0][:max(
-                    1, min(torn_bytes, len(self._pending[0]) - 1))]
-                self._f.write(frag)
-                self._f.flush()
-                os.fsync(self._f.fileno())
-            self._pending.clear()
-            self._f.close()
-            self._f = None
-        return dropped
+        with self._lock:
+            dropped = len(self._pending)
+            if self._f is not None:
+                if torn_bytes > 0 and self._pending:
+                    frag = self._pending[0][:max(
+                        1, min(torn_bytes, len(self._pending[0]) - 1))]
+                    self._f.write(frag)
+                    self._f.flush()
+                    os.fsync(self._f.fileno())
+                self._pending.clear()
+                self._f.close()
+                self._f = None
+            return dropped
 
     def close(self) -> None:
-        if self._f is not None:
-            self.flush()
-            self._f.close()
-            self._f = None
+        with self._lock:
+            if self._f is not None:
+                self.flush()
+                self._f.close()
+                self._f = None
 
 
 # ------------------------------------------------------------- reader ------
@@ -294,6 +307,15 @@ def fold_records(records: List[Dict],
     start index, submit records only create missing entries, finish
     records overwrite the reason. Replaying the whole journal over any
     snapshot therefore converges to the same table.
+
+    A token record whose start index lies beyond the tokens accumulated
+    so far is **mid-file corruption**, not a torn tail: fsync batching
+    flushes earlier tokens before later ones, so an intact journal can
+    never produce a gap. The rid keeps its consistent prefix, every
+    later token record for it is ignored (applying past the gap would
+    fabricate an inconsistent stream), and the entry is flagged with
+    ``token_gap=True`` so recovery can report it instead of silently
+    replaying a short prefix as durable truth.
     """
     table: Dict[int, Dict] = {}
     if base is not None:
@@ -319,10 +341,16 @@ def fold_records(records: List[Dict],
                 logger.warning("journal: token record for unknown rid %s",
                                rec["rid"])
                 continue
+            if r.get("token_gap"):     # rid poisoned by an earlier gap
+                continue
             i, toks = rec["i"], rec["tok"]
-            if len(r["tokens"]) < i:   # gap — lost records between; pad
-                logger.warning("journal: token gap for rid %s at %d",
-                               rec["rid"], i)
+            if len(r["tokens"]) < i:   # mid-file corruption (see above)
+                logger.error(
+                    "journal: token gap for rid %s at index %d (have %d "
+                    "tokens) — mid-file corruption; keeping the consistent "
+                    "prefix and ignoring this rid's later token records",
+                    rec["rid"], i, len(r["tokens"]))
+                r["token_gap"] = True
                 continue
             r["tokens"][i:i + len(toks)] = toks
         elif t == "finish":

@@ -17,10 +17,11 @@ import pytest
 from repro.configs.registry import ARCHS
 from repro.models import init_params
 from repro.serving import (DeadlineExceeded, Engine, Fault, FaultInjector,
-                           FrontDoor, InvalidRequest, QueueFull,
-                           RequestCancelled, ShuttingDown, SimulatedCrash,
-                           read_journal, recover)
-from repro.serving.errors import REASON_CANCELLED, REASON_COMPLETED
+                           FrontDoor, InvalidRequest, JournalWriter,
+                           QueueFull, RequestCancelled, ShuttingDown,
+                           SimulatedCrash, read_journal, recover)
+from repro.serving.errors import (REASON_CANCELLED, REASON_COMPLETED,
+                                  REASON_WALL)
 
 
 def small(name, **kw):
@@ -114,6 +115,25 @@ def test_drain_closes_admissions(engine, moe_setup):
         door.submit(prompts[1], 4)
     # drain is idempotent
     assert len(door.drain(timeout=1.0)) == 1
+
+
+def test_wall_timeout_leaves_no_live_streams(engine, moe_setup):
+    """run(max_wall_s=...) expiry is the one way the serve loop exits
+    with work pending: every stream must still reach a terminal state
+    (never hang a consumer blocked in result()) and the door must be
+    closed to further admissions."""
+    _, _, prompts = moe_setup
+    door = FrontDoor(engine, num_slots=1, max_wall_s=0.05)
+    stream = door.submit(prompts[0], 100)   # inboxed before the loop runs
+    door.start()
+    door._thread.join(timeout=120.0)
+    assert not door._thread.is_alive()
+    assert stream.done                      # terminal, not abandoned
+    assert stream.finish_reason in (REASON_WALL, REASON_COMPLETED)
+    with pytest.raises(ShuttingDown):
+        door.submit(prompts[1], 4)
+    out = door.drain(timeout=10.0)
+    assert all(s.done for s in out)
 
 
 # ----------------------------------------------------- taxonomy surface ---
@@ -224,6 +244,28 @@ def test_crash_before_snapshot_recovers_from_journal_alone(
         assert s.finish_reason == REASON_COMPLETED
         np.testing.assert_array_equal(stream_tokens(s), free[b])
     assert door2.replay_stats()["mismatches"] == 0
+
+
+def test_recover_flags_mid_file_token_gap(engine, moe_setup, tmp_path):
+    """A token record starting beyond the accumulated tokens is mid-file
+    corruption: recovery resumes from the consistent prefix but reports
+    the rid in corrupt_gaps instead of silently trusting a short
+    journal."""
+    _, _, prompts = moe_setup
+    jp = os.path.join(tmp_path, "wal.journal")
+    w = JournalWriter(jp)
+    w.append("submit", rid=0, prompt=prompts[0].tolist(), max_new=10,
+             arrival_s=0.0)
+    w.append("token", rid=0, i=0, tok=[1, 2])
+    w.append("token", rid=0, i=5, tok=[3])  # gap: records lost mid-file
+    w.close()
+    door2, report = recover(engine, journal_path=jp, num_slots=1)
+    assert report.corrupt_gaps == 1
+    assert report.resumed == 1
+    s = door2.streams[0]
+    assert s.replayed == 2                  # consistent prefix only
+    door2.drain(timeout=120.0)
+    assert s.finish_reason == REASON_COMPLETED
 
 
 def test_torn_tail_recovery_no_snapshot(engine, moe_setup, tmp_path):

@@ -6,6 +6,7 @@ semantics the crash-recovery path (serving/frontdoor.recover) rests on.
 """
 import os
 import struct
+import threading
 
 import numpy as np
 import pytest
@@ -68,6 +69,32 @@ def test_token_records_batch_lifecycle_syncs_now(tmp_path):
     w.append("finish", rid=0, reason="completed")  # DURABLE_NOW -> flush
     assert len(read_journal(p).records) == 3
     w.close()
+
+
+def test_writer_concurrent_appends_all_durable(tmp_path):
+    """Caller threads (submit/cancel) and the serving thread append
+    concurrently; without the writer's internal lock a record appended
+    during another thread's flush() could vanish between the buffered
+    write and the buffer clear — despite append() reporting it synced."""
+    p = wal(tmp_path)
+    w = JournalWriter(p, fsync_every=3)     # small batch: flushes collide
+
+    def worker(tid):
+        for i in range(40):
+            w.append("token", rid=tid, i=i, tok=[tid])
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    w.close()
+    recs = read_journal(p).records
+    assert len(recs) == 160                 # nothing dropped
+    assert sorted(r["seq"] for r in recs) == list(range(160))
+    for tid in range(4):                    # per-rid order preserved
+        idx = [r["i"] for r in recs if r["rid"] == tid]
+        assert idx == sorted(idx)
 
 
 def test_abandon_loses_unflushed_tail(tmp_path):
@@ -228,16 +255,22 @@ def test_fold_over_snapshot_base_converges(tmp_path):
     assert table[0]["tokens"] == [5, 6, 7]
 
 
-def test_fold_token_gap_skipped_and_cancel_flag():
+def test_fold_token_gap_poisons_rid_and_cancel_flag():
+    """A mid-file gap is corruption, not a torn tail: the rid keeps its
+    consistent prefix, later token records for it are ignored (they lie
+    beyond the gap), and the entry is flagged for the recovery report."""
     recs = [
-        {"seq": 0, "t": "submit", "rid": 1, "prompt": [9], "max_new": 4,
+        {"seq": 0, "t": "submit", "rid": 1, "prompt": [9], "max_new": 8,
          "arrival_s": 0.0},
-        {"seq": 1, "t": "token", "rid": 1, "i": 3, "tok": [1]},  # gap
-        {"seq": 2, "t": "token", "rid": 7, "i": 0, "tok": [1]},  # unknown
-        {"seq": 3, "t": "cancel", "rid": 1},
+        {"seq": 1, "t": "token", "rid": 1, "i": 0, "tok": [5, 6]},
+        {"seq": 2, "t": "token", "rid": 1, "i": 4, "tok": [1]},  # gap
+        {"seq": 3, "t": "token", "rid": 1, "i": 5, "tok": [2]},  # poisoned
+        {"seq": 4, "t": "token", "rid": 7, "i": 0, "tok": [1]},  # unknown
+        {"seq": 5, "t": "cancel", "rid": 1},
     ]
     table = fold_records(recs)
-    assert table[1]["tokens"] == []            # gap record dropped
+    assert table[1]["tokens"] == [5, 6]        # consistent prefix kept
+    assert table[1]["token_gap"] is True
     assert 7 not in table
     assert table[1].get("cancel_requested") is True
 
