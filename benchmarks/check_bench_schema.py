@@ -1,7 +1,7 @@
 """Sanity-check BENCH_*.json artifacts before CI uploads them.
 
 Benchmarks persist machine-read metrics (BENCH_dispatch.json,
-BENCH_robustness.json) that downstream tooling and the README tables
+BENCH_spec.json, BENCH_robustness.json) that downstream tooling and the README tables
 consume. A refactor that silently renames a key, emits NaN, or drops a
 section would still "pass" the benchmark run — this checker fails the
 CI job instead.
@@ -60,6 +60,25 @@ SPECS: Dict[str, Dict[str, Callable[[Any], bool]]] = {
         "dispatch.sorted_wall_ms": _num(lo=0.0),
         "dispatch.einsum_wall_ms": _num(lo=0.0),
         "dispatch.sorted_vs_einsum_err": _num(lo=0.0),
+    },
+    "BENCH_spec.json": {
+        # the speculative-decoding acceptance criteria, machine-checked:
+        # scheduler-spec must beat plain decoding in the memory-bound
+        # OTPS model, stay lossless (token-exact, incl. mixed traffic),
+        # and hierarchical selection must activate fewer experts than
+        # naive per-request top-k
+        "spec.speedup": _num(lo=1.0),
+        "spec.speedup_wall": _num(lo=0.0),
+        "spec.acceptance_rate": _num(0.0, 1.0),
+        "spec.drafted": _num(lo=1),
+        "spec.tokens_per_round": _num(lo=0.0),
+        "spec.token_exact_vs_plain": _is(True),
+        "spec.token_exact_vs_lockstep": _is(True),
+        "spec.token_exact_mixed": _is(True),
+        "spec.activated_hier": _num(lo=0.0),
+        "spec.activated_naive": _num(lo=0.0),
+        "spec.activated_ratio": _num(0.0, 1.0),
+        "spec.spec_budget_exhausted": _num(lo=0),
     },
     "BENCH_robustness.json": {
         "robustness.survival_rate": _num(0.0, 1.0),

@@ -41,6 +41,46 @@ def bench_cfg(num_experts: int, top_k: int, *, d_model: int = 64,
     )
 
 
+def draft_cfg(*, d_model: int = 32, layers: int = 1, d_ff: int = 128,
+              vocab: int = 256) -> ArchConfig:
+    """A dense draft model an order of magnitude cheaper per step than
+    the bench MoE target — the shape speculative decoding needs for a
+    real throughput win (draft bytes << target bytes)."""
+    return ArchConfig(
+        name=f"bench-draft-d{d_model}", family="dense",
+        num_layers=layers, d_model=d_model, d_ff=d_ff, vocab_size=vocab,
+        attn=AttnConfig(num_heads=2, num_kv_heads=1, head_dim=16),
+    )
+
+
+@functools.lru_cache(maxsize=2)
+def trained_draft(steps: int = 300, seed: int = 1):
+    """Train the dense draft on the same synthetic dataset family the
+    bench MoE target trains on, so target/draft greedy agreement (the
+    speculation acceptance rate) reflects shared data, not shared
+    weights."""
+    cfg = draft_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(
+        cfg, lr=cosine_schedule(3e-3, 10, steps), remat=False))
+    fam = make_dataset_family(cfg.vocab_size, DATASETS)
+    rng = np.random.default_rng(seed)
+    names = list(fam)
+    for i in range(steps):
+        lm = fam[names[i % len(names)]]
+        toks = jnp.asarray(lm.sample(rng, 8, 64))
+        params, opt, _ = step(params, opt, toks)
+    return cfg, params
+
+
+def param_bytes(params) -> int:
+    """Total parameter bytes — the per-step HBM traffic of a dense
+    model in the memory-bound decode regime (weights read once/step)."""
+    return int(sum(np.asarray(p).nbytes
+                   for p in jax.tree_util.tree_leaves(params)))
+
+
 @functools.lru_cache(maxsize=4)
 def trained_model(num_experts: int, top_k: int, steps: int = 150,
                   seed: int = 0):

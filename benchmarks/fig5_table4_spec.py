@@ -1,50 +1,151 @@
-"""Figure 5 / Table 4 / Figure 8 — speculative-decoding-aware selection
-(Algorithm 4) vs flat batch selection (Algorithm 2) at BS=4, speculation
-length 3: the verify step processes (b=4, t=4) token blocks, and the
-hierarchical per-request budgets exploit intra-request correlation.
+"""Figure 5 / Table 4 / Figure 8 — speculative decoding as a scheduler
+subsystem, scored on heterogeneous traffic.
 
-Configs follow Table 4's (k0, m, m_r) grid (budgets scaled /4 for E=32).
+Three questions, answered with live serving runs (not static grids):
+
+1. **Throughput** — does the scheduler-integrated draft-then-verify
+   path (serving/spec_scheduler.py) beat plain continuous decoding on
+   tokens/s? Scored two ways: measured CPU wall clock, and the
+   memory-bound OTPS byte model (decode step time ~ HBM bytes of
+   weights touched — the paper's premise), which is deterministic and
+   is the contract `check_bench_schema.py` enforces.
+2. **Losslessness** — greedy scheduler-spec output must be token-exact
+   vs the lockstep spec reference AND vs plain greedy, including a
+   mixed spec+plain batch sharing one running batch.
+3. **Selection** — hierarchical, correlation-aware Algorithm-4
+   selection (mode="spec" with per-request budgets + batch top-up +
+   cross-pass gate priors) must activate fewer experts than naive
+   per-request top-k at the verify shapes, at comparable acceptance.
+
+The draft is a separately *trained* dense model (benchmarks/common.py
+``trained_draft``) — agreement with the MoE target comes from shared
+training data, not shared weights, so the acceptance rate is a real
+measurement. Results persist to BENCH_spec.json at the repo root.
 """
 from __future__ import annotations
 
+import json
+import os
+
 import numpy as np
 
-from benchmarks.common import (DATASETS, eval_tokens, otps_model,
-                               teacher_forced_decode_ce, trained_model)
+from benchmarks.common import (DATASETS, eval_tokens, param_bytes,
+                               trained_draft, trained_model)
 from repro.configs.base import XSharePolicy
+from repro.kernels.ops import moe_step_bytes
+from repro.serving import Engine
 
-# (k0, m, m_r) — Table 4 grid scaled /4
-CONFIGS = [(0, 4, 1), (1, 0, 1), (1, 0, 2), (2, 0, 1), (1, 6, 0),
-           (1, 8, 0), (2, 3, 0), (0, 0, 2)]
-B_REQ = 4
-T_SPEC = 4      # 1 + L_s with L_s = 3
+BENCH_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                          "BENCH_spec.json")
+
+# Algorithm 4: warm-up union + per-request budget + batch top-up, with
+# the cross-pass correlation prior (corr) feeding scheduler gate
+# histograms back into selection.
+HIER = XSharePolicy(mode="spec", k0=1, m_l=2, m_r=1, corr=1.0)
+# Naive reference: every request independently keeps its own top-k
+# (k = top_k of the model), no hierarchy, no correlation prior.
+NAIVE = XSharePolicy(mode="spec", k0=0, m_l=0, m_r=4, corr=0.0)
 
 
-def run() -> dict:
+def _exact(a: np.ndarray, b: np.ndarray) -> bool:
+    return bool(np.array_equal(np.asarray(a), np.asarray(b)))
+
+
+def run(quick: bool = False) -> dict:
     cfg, params, fam, _ = trained_model(32, 4)
-    toks = eval_tokens(fam, DATASETS, batch_per=1, seq=49)  # b=4 requests
-    spec_shape = (B_REQ, T_SPEC)
-    base = teacher_forced_decode_ce(cfg, params, toks,
-                                    XSharePolicy(mode="off"),
-                                    spec_shape=spec_shape)
-    base_otps = otps_model(cfg, base["activated"], B_REQ * T_SPEC)
-    rows = [{"config": "baseline", **base, "otps_rel": 1.0,
-             "ce_delta": 0.0, "mode": "off"}]
-    for k0, m, m_r in CONFIGS:
-        mode = "spec" if m_r > 0 else "batch"
-        pol = XSharePolicy(mode=mode, k0=k0, m_l=m, m_r=m_r)
-        r = teacher_forced_decode_ce(cfg, params, toks, pol,
-                                     spec_shape=spec_shape
-                                     if mode == "spec" else None)
-        otps = otps_model(cfg, r["activated"], B_REQ * T_SPEC)
-        rows.append({"config": f"({k0},{m},{m_r})", **r,
-                     "otps_rel": otps / base_otps,
-                     "ce_delta": r["ce"] - base["ce"], "mode": mode})
-    # paper claims: (1,0,4)-equivalent Pareto-optimal; missing warm-up
-    # (0,16,4)-equivalent degrades accuracy hard (Sec 6.2)
-    best = next(r for r in rows if r["config"] == "(1,0,1)")
-    nowarm = next(r for r in rows if r["config"] == "(0,4,1)")
-    return {"rows": rows,
-            "spec_gain_best": best["otps_rel"] - 1,
-            "spec_ce_delta_best": best["ce_delta"],
-            "nowarm_ce_delta": nowarm["ce_delta"]}
+    dcfg, dparams = trained_draft()
+    B, seq, Ls = 8, 16, 3
+    max_new = 24 if quick else 48
+    prompts = eval_tokens(fam, DATASETS, batch_per=B // len(DATASETS),
+                          seq=seq)
+    kw = dict(cache_len=seq + max_new + Ls + 8)
+
+    plain_eng = Engine(cfg, params, **kw)
+    spec_eng = Engine(cfg, params, draft=(dcfg, dparams), spec_len=Ls,
+                      **kw)
+    # warm both compiled paths so the timed runs measure steady state
+    plain_eng.generate(prompts, 4)
+    spec_eng.generate(prompts, 4)
+
+    plain_toks, plain_st = plain_eng.generate(prompts, max_new)
+    spec_toks, spec_st = spec_eng.generate(prompts, max_new)
+    lock_toks, lock_st = spec_eng.generate(prompts, max_new,
+                                           lockstep=True)
+    token_exact_vs_plain = _exact(plain_toks, spec_toks)
+    token_exact_vs_lockstep = _exact(lock_toks, spec_toks)
+
+    # mixed traffic: spec and plain requests share one running batch
+    # (fewer slots than requests, so eviction/readmission is exercised)
+    sched = spec_eng.make_scheduler(num_slots=B // 2, invariants=True)
+    for b in range(B):
+        sched.submit(prompts[b], max_new, spec=(b % 2 == 0))
+    states = sched.run()
+    mixed_exact = all(
+        _exact(np.asarray(st.tokens[:max_new]), plain_toks[b])
+        for b, st in enumerate(states))
+
+    # --- OTPS byte model (memory-bound regime) ------------------------
+    E, k, L = cfg.moe.num_experts, cfg.moe.top_k, cfg.num_layers
+    step_bytes = moe_step_bytes(min(E, B * k), cfg.d_model,
+                                cfg.moe.d_ff_expert, tokens=B,
+                                top_k=k) * L
+    verify_bytes = moe_step_bytes(min(E, B * (Ls + 1) * k), cfg.d_model,
+                                  cfg.moe.d_ff_expert,
+                                  tokens=B * (Ls + 1), top_k=k) * L
+    # the draft scan always runs spec_len+1 dense steps per round
+    round_bytes = verify_bytes + (Ls + 1) * param_bytes(dparams)
+    rounds = max(spec_st.steps, 1)
+    tokens_per_round = spec_st.new_tokens / rounds
+    otps_baseline = 1e9 * B / step_bytes
+    otps_spec = 1e9 * tokens_per_round / round_bytes
+    speedup = otps_spec / otps_baseline
+    speedup_wall = spec_st.otps / max(plain_st.otps, 1e-9)
+
+    # --- hierarchical vs naive per-request top-k selection, live ------
+    hier_eng = Engine(cfg, params, policy=HIER,
+                      draft=(dcfg, dparams), spec_len=Ls, **kw)
+    naive_eng = Engine(cfg, params, policy=NAIVE,
+                       draft=(dcfg, dparams), spec_len=Ls, **kw)
+    _, hier_st = hier_eng.generate(prompts, max_new)
+    _, naive_st = naive_eng.generate(prompts, max_new)
+    act_hier = hier_st.mean_aux("activated_experts")
+    act_naive = naive_st.mean_aux("activated_experts")
+
+    rows = [
+        {"config": "plain", "otps_model": otps_baseline,
+         "wall_otps": plain_st.otps, "acceptance": 0.0},
+        {"config": "sched-spec", "otps_model": otps_spec,
+         "wall_otps": spec_st.otps,
+         "acceptance": spec_st.acceptance_rate,
+         "tokens_per_round": tokens_per_round},
+        {"config": "lockstep-spec", "wall_otps": lock_st.otps,
+         "acceptance": lock_st.acceptance_rate},
+        {"config": "hier-(1,2,1)", "activated": act_hier,
+         "acceptance": hier_st.acceptance_rate},
+        {"config": "naive-(0,0,4)", "activated": act_naive,
+         "acceptance": naive_st.acceptance_rate},
+    ]
+    out = {
+        "rows": rows,
+        "speedup": speedup,
+        "speedup_wall": speedup_wall,
+        "acceptance_rate": spec_st.acceptance_rate,
+        "drafted": spec_st.drafted,
+        "accepted": spec_st.accepted,
+        "rounds": rounds,
+        "tokens_per_round": tokens_per_round,
+        "otps_spec": otps_spec,
+        "otps_baseline": otps_baseline,
+        "spec_budget_exhausted": spec_st.spec_budget_exhausted,
+        "token_exact_vs_plain": token_exact_vs_plain,
+        "token_exact_vs_lockstep": token_exact_vs_lockstep,
+        "token_exact_mixed": mixed_exact,
+        "activated_hier": act_hier,
+        "activated_naive": act_naive,
+        "activated_ratio": act_hier / max(act_naive, 1e-9),
+        "acceptance_hier": hier_st.acceptance_rate,
+        "acceptance_naive": naive_st.acceptance_rate,
+    }
+    with open(BENCH_PATH, "w") as f:
+        json.dump({"spec": out}, f, indent=1, default=float)
+    return out

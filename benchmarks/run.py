@@ -9,6 +9,7 @@ writes the full row data to benchmarks/results.json.
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import os
 import sys
@@ -25,7 +26,8 @@ DERIVED_KEY = {
                      "consecutive/cross overlap ratio @k=5"),
     "fig4_table3_tradeoff": ("reduction_at_(4,1)",
                              "activated-expert reduction @(m=4,k0=1)"),
-    "fig5_table4_spec": ("spec_gain_best", "OTPS-model gain, Alg4 best"),
+    "fig5_table4_spec": ("speedup",
+                         "scheduler-spec vs plain tokens/s (OTPS model)"),
     "table1_mixed": ("mixed_gain_best", "OTPS-model gain, mixed batch"),
     "table2_ep": ("bs16", "EP claims dict @bs16"),
     "bs_ablation": ("reduction_bs4",
@@ -41,12 +43,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true",
-                    help="CI smoke target: dispatch-path shootout only "
-                         "(reduced shapes), persists BENCH_dispatch.json")
+                    help="CI smoke mode (reduced shapes). Without "
+                         "--only, runs the dispatch shootout + spec "
+                         "scoreboard (persists BENCH_dispatch.json / "
+                         "BENCH_spec.json); with --only, runs exactly "
+                         "the named benches in quick mode")
     args = ap.parse_args()
     names = BENCHES if not args.only else tuple(args.only.split(","))
-    if args.quick:
-        names = ("kernels_bench",)
+    if args.quick and not args.only:
+        names = ("kernels_bench", "fig5_table4_spec")
 
     results = {}
     print("name,us_per_call,derived")
@@ -54,8 +59,10 @@ def main() -> None:
     for name in names:
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.perf_counter()
+        quick_ok = "quick" in inspect.signature(mod.run).parameters
         try:
-            out = mod.run(quick=True) if args.quick else mod.run()
+            out = mod.run(quick=True) if args.quick and quick_ok \
+                else mod.run()
         except Exception as e:  # noqa: BLE001
             failed.append(name)
             print(f"{name},ERROR,{e!r}")

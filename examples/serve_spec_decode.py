@@ -1,11 +1,12 @@
-"""Serving example: batched requests + EAGLE-style speculative decoding
-with the paper's Algorithm 4 (hierarchical per-request expert selection)
-on the verify batches.
+"""Serving example: speculative decoding as a scheduler subsystem.
+
+Mixed speculative + plain requests stream through the crash-tolerant
+FrontDoor over one SpecScheduler batch: per-slot adaptive draft lengths,
+spec budgets, and the paper's Algorithm 4 (hierarchical, correlation-
+aware per-request expert selection) on the verify batches.
 
     PYTHONPATH=src python examples/serve_spec_decode.py
 """
-import dataclasses
-
 import jax
 import numpy as np
 
@@ -17,14 +18,13 @@ from repro.serving import Engine
 
 
 def main() -> None:
-    # target: reduced granite-MoE; draft: 2-layer dense with same vocab
+    # target: reduced granite-MoE; draft: lightly perturbed copy of the
+    # target (untrained weights make an independent draft accept
+    # ~nothing; a perturbed twin shows the ragged-acceptance machinery
+    # the way a distilled EAGLE head would)
     cfg = get_config("granite-moe-1b-a400m").reduced(
         num_layers=4, max_d_model=256, max_experts=4, max_vocab=512)
     params = init_params(cfg, jax.random.PRNGKey(0))
-    # draft: lightly perturbed copy of the target (untrained weights make
-    # an independent draft accept ~nothing; a perturbed twin shows the
-    # ragged-acceptance machinery the way a distilled EAGLE head would)
-    dcfg = cfg
     dparams = jax.tree_util.tree_map(
         lambda a: a + 0.01 * jax.random.normal(jax.random.PRNGKey(7),
                                                a.shape, a.dtype),
@@ -32,34 +32,51 @@ def main() -> None:
     print(f"target {param_count(params)/1e6:.1f}M / "
           f"draft {param_count(dparams)/1e6:.1f}M, spec len 3")
 
-    # heterogeneous batch: one request per synthetic dataset (Sec 6.3)
+    # heterogeneous traffic: one request per synthetic dataset (Sec 6.3)
     fam = make_dataset_family(cfg.vocab_size,
                               ["gpqa", "aime", "mmlu", "lcr"])
     prompts = mixed_request_batch(fam, seq_len=16, seed=0)
+    B, max_new = prompts.shape[0], 32
 
-    runs = [
-        ("plain decode", None, 0, XSharePolicy(mode="off")),
-        ("spec decode", (dcfg, dparams), 3, XSharePolicy(mode="off")),
-        ("spec + Alg4 (k0=1, m_r=2)", (dcfg, dparams), 3,
+    # plain greedy reference — the losslessness yardstick for everything
+    plain_eng = Engine(cfg, params, cache_len=128)
+    ref, ref_st = plain_eng.generate(prompts, max_new)
+    print(f"{'plain decode':34s} OTPS {ref_st.otps:7.1f}  "
+          f"steps {ref_st.steps:3d}")
+
+    for name, pol in [
+        ("sched-spec", XSharePolicy(mode="off")),
+        ("sched-spec + Alg4 (k0=1, m_r=2)",
          XSharePolicy(mode="spec", k0=1, m_l=0, m_r=2)),
-    ]
-    ref = None
-    for name, draft, spec_len, pol in runs:
-        eng = Engine(cfg, params, policy=pol, cache_len=128, draft=draft,
-                     spec_len=spec_len)
-        toks, st = eng.generate(prompts, 32)
-        line = (f"{name:28s} OTPS {st.otps:7.1f}  steps {st.steps:3d}")
-        if st.accepted_hist:
-            line += f"  acc/step {st.mean_accepted:.2f}"
+    ]:
+        eng = Engine(cfg, params, policy=pol, cache_len=128,
+                     draft=(cfg, dparams), spec_len=3)
+        toks, st = eng.generate(prompts, max_new)
+        line = (f"{name:34s} OTPS {st.otps:7.1f}  rounds {st.steps:3d}"
+                f"  acc rate {st.acceptance_rate:.2f}")
         if st.layer_aux:
-            line += (f"  experts/layer {st.mean_aux('activated_experts'):.1f}"
-                     f" (set {st.mean_aux('selected_set'):.1f})")
+            line += (f"  experts/layer "
+                     f"{st.mean_aux('activated_experts'):.1f}")
+        if pol.mode == "off":
+            line += f"  lossless: {np.array_equal(ref, toks)}"
         print(line)
-        if ref is None:
-            ref = toks
-        elif pol.mode == "off":
-            print(f"{'':28s} lossless vs plain: "
-                  f"{np.array_equal(ref, toks)}")
+
+    # ---- mixed spec+plain traffic through the streaming front door ----
+    eng = Engine(cfg, params, cache_len=128, draft=(cfg, dparams),
+                 spec_len=3)
+    door = eng.make_frontdoor(num_slots=2)   # fewer slots than requests
+    streams = [door.submit(prompts[b], max_new, spec=(b % 2 == 0))
+               for b in range(B)]
+    live = [t for t in streams[0]]           # consume one stream live
+    door.drain(timeout=300.0)
+    print(f"\nfront door: {B} requests ({B - B // 2} spec, {B // 2} "
+          f"plain) on 2 slots; first stream delivered "
+          f"{len(live)} tokens live")
+    for b, s in enumerate(streams):
+        kind = "spec " if s.spec else "plain"
+        exact = np.array_equal(np.asarray(s.tokens), ref[b])
+        print(f"  req {b} [{kind}] {s.finish_reason:10s} "
+              f"{len(s.tokens):2d} tokens  lossless: {exact}")
 
 
 if __name__ == "__main__":

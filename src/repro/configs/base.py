@@ -175,3 +175,7 @@ class XSharePolicy:
     m_g: int = 0         # per-device-group budget (ep mode)
     num_groups: int = 8  # EP group count G
     strict_cap: bool = True  # ep: cap warm-up experts at m_g per group too
+    # spec: weight of the cross-pass correlation prior (per-request gate
+    # histograms collected by the scheduler) blended into Algorithm-4
+    # selection scores; 0 disables the prior entirely.
+    corr: float = 1.0

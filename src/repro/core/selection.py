@@ -82,21 +82,43 @@ def batch_select(gates: jnp.ndarray, m_l: int, k0: int) -> jnp.ndarray:
     return greedy_select(gates, m_l, s0)
 
 
-def per_request_select(gates: jnp.ndarray, m_r: int, k0: int) -> jnp.ndarray:
+def per_request_select(gates: jnp.ndarray, m_r: int, k0: int,
+                       *, priors: Optional[jnp.ndarray] = None,
+                       corr: float = 1.0) -> jnp.ndarray:
     """Algorithm 3 — per-request greedy selection, vectorized over requests.
 
     gates: (b, t, E) where t = 1 + L_s tokens of each request.
     Returns per-request masks S_r, shape (b, E).
+
+    Requests whose gate rows are entirely zero (inactive continuous-
+    batching slots, compute-masked out of routing) select nothing: the
+    greedy pool would otherwise rank an all-zero score vector and emit
+    the first m_r expert indices.
+
+    priors: optional (b, E) per-request gate histograms from *earlier*
+    decode rounds of the same requests (Assumption 4.1's intra-request
+    correlation, carried across draft/verify passes by the scheduler).
+    Each request's greedy score becomes agg + corr * |agg|_1 * prior_hat,
+    i.e. the prior redistributes up to a `corr` fraction of the request's
+    current gate mass toward its historically preferred experts — scale-
+    matched so the blend is invariant to the number of live tokens.
     """
     s0 = warmup_union(gates, k0)              # (b, E)
     agg = gates.sum(axis=-2)                  # (b, E)
+    live = agg.sum(-1, keepdims=True) > 0     # (b, 1)
+    if priors is not None and corr > 0.0:
+        pnorm = priors / jnp.maximum(priors.sum(-1, keepdims=True), 1e-30)
+        agg = agg + corr * agg.sum(-1, keepdims=True) * pnorm
     if m_r <= 0:
         return s0
     pool = jnp.where(s0, -jnp.inf, agg)
-    return s0 | topk_mask(pool, min(m_r, gates.shape[-1]))
+    picked = topk_mask(pool, min(m_r, gates.shape[-1]))
+    return s0 | (picked & live)
 
 
-def spec_select(gates: jnp.ndarray, m: int, m_r: int, k0: int) -> jnp.ndarray:
+def spec_select(gates: jnp.ndarray, m: int, m_r: int, k0: int,
+                *, priors: Optional[jnp.ndarray] = None,
+                corr: float = 1.0) -> jnp.ndarray:
     """Algorithm 4 — speculative-decoding-aware hierarchical selection.
 
     Exploits intra-request expert-preference correlation (Assumption 4.1):
@@ -104,11 +126,27 @@ def spec_select(gates: jnp.ndarray, m: int, m_r: int, k0: int) -> jnp.ndarray:
     the per-request sets are unioned, and batch-level greedy tops up to
     the batch budget m.
 
+    With `priors` (per-request gate histograms collected by the scheduler
+    across earlier rounds) the selection becomes correlation-aware at
+    both levels: per-request scores blend each request's own history
+    (see per_request_select) and the batch-level top-up blends the
+    mass-weighted mixture of all live requests' histories, so experts
+    that several co-batched requests have favored before win ties over
+    one-off spikes in the current draft window.
+
     gates: (b, 1+L_s, E). Returns S_batch, shape (E,).
     """
-    s_r = per_request_select(gates, m_r, k0)  # (b, E)
+    s_r = per_request_select(gates, m_r, k0, priors=priors, corr=corr)
     s_batch = s_r.any(axis=0)                 # union across requests
     flat = gates.reshape(-1, gates.shape[-1])
+    if priors is not None and corr > 0.0:
+        pnorm = priors / jnp.maximum(priors.sum(-1, keepdims=True), 1e-30)
+        req_mass = gates.sum(axis=(-2, -1), keepdims=False)      # (b,)
+        blended = flat.sum(0) + corr * (pnorm * req_mass[:, None]).sum(0)
+        if m <= 0:
+            return s_batch
+        pool = jnp.where(s_batch, -jnp.inf, blended)
+        return s_batch | topk_mask(pool, min(m, gates.shape[-1]))
     return greedy_select(flat, m, s_batch)
 
 
@@ -227,12 +265,15 @@ def rank_by_affinity(cand_hists: jnp.ndarray,
 
 def apply_policy(gates: jnp.ndarray, policy, *, top_k: int,
                  spec_shape: Optional[Tuple[int, int]] = None,
-                 logits: Optional[jnp.ndarray] = None):
+                 logits: Optional[jnp.ndarray] = None,
+                 priors: Optional[jnp.ndarray] = None):
     """Dispatch a full XSharePolicy at one MoE layer.
 
     gates: (T, E) full router probabilities (T = all tokens this step).
     spec_shape: (num_requests, tokens_per_request) — required for
     mode="spec"; T must equal their product.
+    priors: optional (num_requests, E) gate-histogram priors for
+    mode="spec" correlation-aware selection (weight `policy.corr`).
 
     Returns (indices (T, top_k), weights (T, top_k), mask (E,)).
     """
@@ -248,7 +289,8 @@ def apply_policy(gates: jnp.ndarray, policy, *, top_k: int,
         b, t = spec_shape
         assert b * t == T, (b, t, T)
         mask = spec_select(gates.reshape(b, t, E), policy.m_l,
-                           policy.m_r, policy.k0)
+                           policy.m_r, policy.k0, priors=priors,
+                           corr=getattr(policy, "corr", 1.0))
     elif mode == "ep":
         mask = ep_select(gates, policy.m_g, policy.num_groups, policy.k0,
                          strict_cap=policy.strict_cap)

@@ -141,13 +141,15 @@ def _ffn_block(cfg: ArchConfig, lp: Dict, x: jnp.ndarray,
                policy: XSharePolicy, spec_shape, capacity,
                capacity_factor: float,
                token_mask: Optional[jnp.ndarray] = None,
-               dispatch: str = "auto"):
+               dispatch: str = "auto",
+               spec_priors: Optional[jnp.ndarray] = None):
     if cfg.family == "moe":
         h = rms_norm(x, lp["moe_norm"], cfg.norm_eps)
         y, aux = moe_apply(lp["moe"], h, cfg.moe, policy,
                            spec_shape=spec_shape, capacity=capacity,
                            capacity_factor=capacity_factor,
-                           token_mask=token_mask, dispatch=dispatch)
+                           token_mask=token_mask, dispatch=dispatch,
+                           spec_priors=spec_priors)
         return x + y, aux
     h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
     return x + mlp_apply(lp["mlp"], h, cfg.act), {}
@@ -540,7 +542,8 @@ def decode_step(cfg: ArchConfig, params, tokens: jnp.ndarray, cache: Dict, *,
                 force_window: Optional[int] = None,
                 capacity_factor: float = 2.0,
                 active: Optional[jnp.ndarray] = None,
-                dispatch: str = "auto"):
+                dispatch: str = "auto",
+                spec_priors: Optional[jnp.ndarray] = None):
     """Serve step: T new tokens per sequence (T=1 plain decode, T=1+L_s
     speculative verify). tokens: (B, T) (audio: (B,T,K)).
 
@@ -549,6 +552,9 @@ def decode_step(cfg: ArchConfig, params, tokens: jnp.ndarray, cache: Dict, *,
     routing (no expert activation, no capacity consumption, no influence
     on XShare batch selection) and their aux metrics. Their logits are
     garbage the caller must ignore.
+
+    spec_priors: optional (B, E) per-request gate-histogram priors for
+    mode="spec" correlation-aware selection (see core/selection.py).
 
     Returns (logits (B,T,V[,K->(B,T,K,V)]), new cache, aux)."""
     x = embed_tokens(cfg, params, tokens)
@@ -567,7 +573,8 @@ def decode_step(cfg: ArchConfig, params, tokens: jnp.ndarray, cache: Dict, *,
             h, ck, cv = _attn_block_decode(cfg, lp, h, positions, ck, cv,
                                            cur, win)
             h, aux = _ffn_block(cfg, lp, h, policy, spec_shape, None,
-                                capacity_factor, token_mask, dispatch)
+                                capacity_factor, token_mask, dispatch,
+                                spec_priors)
             return h, (ck, cv, aux)
         x, (cks, cvs, aux) = jax.lax.scan(
             layer, x, (params["layers"], cache["kv_k"], cache["kv_v"]))

@@ -83,7 +83,8 @@ def init_moe(key, moe: MoEConfig, d_model: int, dtype,
 
 def route(p: Dict, x: jnp.ndarray, moe: MoEConfig, policy: XSharePolicy,
           spec_shape: Optional[Tuple[int, int]] = None,
-          token_mask: Optional[jnp.ndarray] = None):
+          token_mask: Optional[jnp.ndarray] = None,
+          spec_priors: Optional[jnp.ndarray] = None):
     """Router + XShare selection. x: (T, d).
 
     token_mask: optional (T,) bool — masked-out tokens (inactive
@@ -91,6 +92,9 @@ def route(p: Dict, x: jnp.ndarray, moe: MoEConfig, policy: XSharePolicy,
     gate mass is zeroed before XShare batch aggregation, their expert
     index becomes -1 (a zero one-hot), so they consume no dispatch
     capacity and never count as activating an expert.
+
+    spec_priors: optional (b, E) per-request gate-histogram priors for
+    mode="spec" correlation-aware selection (b = spec_shape[0]).
 
     Returns (idx (T,k), weights (T,k), combine (T,E) f32, aux dict).
     The combine matrix (gate weight per token-expert cell) is built
@@ -108,7 +112,7 @@ def route(p: Dict, x: jnp.ndarray, moe: MoEConfig, policy: XSharePolicy,
     else:
         idx, w, mask = selection.apply_policy(
             probs, policy, top_k=moe.top_k, spec_shape=spec_shape,
-            logits=logits)
+            logits=logits, priors=spec_priors)
     if token_mask is not None:
         idx = jnp.where(token_mask[:, None], idx, -1)
         w = jnp.where(token_mask[:, None], w, 0.0)
@@ -139,6 +143,19 @@ def route(p: Dict, x: jnp.ndarray, moe: MoEConfig, policy: XSharePolicy,
         "gate_mass": M.gate_mass_captured(probs, mask),
         "lb_loss": lb,
     }
+    if spec_shape is not None:
+        # per-request gate histogram over this pass's live tokens — the
+        # raw material for the scheduler's correlation priors (fed back
+        # as spec_priors on later rounds). masked rows were zeroed above,
+        # so the mean divides by each request's live-token count.
+        b, t = spec_shape
+        pr = probs.reshape(b, t, probs.shape[-1])
+        if token_mask is not None:
+            denom_r = jnp.maximum(
+                token_mask.reshape(b, t).sum(-1, keepdims=True), 1)
+        else:
+            denom_r = jnp.full((b, 1), t)
+        aux["req_gate_hist"] = pr.sum(axis=1) / denom_r      # (b, E)
     return idx, w, combine, aux
 
 
@@ -258,7 +275,8 @@ def moe_apply(p: Dict, x: jnp.ndarray, moe: MoEConfig,
               capacity_factor: float = 1.25,
               capacity: Optional[int] = None,
               token_mask: Optional[jnp.ndarray] = None,
-              dispatch: str = "auto"):
+              dispatch: str = "auto",
+              spec_priors: Optional[jnp.ndarray] = None):
     """Full MoE layer. x: (..., d) (leading dims flattened internally).
 
     token_mask: optional bool array matching x's leading dims — tokens
@@ -267,6 +285,9 @@ def moe_apply(p: Dict, x: jnp.ndarray, moe: MoEConfig,
     dispatch: expert-compute path, see expert_ffn. The XShare budget
     bound (policy_max_active) sizes the sorted path's padded layout.
 
+    spec_priors: optional (b, E) correlation priors for mode="spec"
+    (see route()).
+
     Returns (y, aux). Shared experts (DeepSeek-style) are added
     unconditionally — they are outside the selection problem (Sec 2.1).
     """
@@ -274,7 +295,7 @@ def moe_apply(p: Dict, x: jnp.ndarray, moe: MoEConfig,
     xt = x.reshape(-1, shape[-1])
     tm = None if token_mask is None else token_mask.reshape(-1)
     idx, w, combine, aux = route(p, xt, moe, policy, spec_shape,
-                                 token_mask=tm)
+                                 token_mask=tm, spec_priors=spec_priors)
     ma = policy_max_active(policy, xt.shape[0], moe.num_experts,
                            spec_shape=spec_shape)
     y = expert_ffn(p, xt, idx, w, moe, capacity_factor=capacity_factor,

@@ -18,8 +18,13 @@ from repro.serving.journal import (  # noqa: F401
 from repro.serving.scheduler import (  # noqa: F401
     Request, RequestState, Scheduler, tighten_policy,
 )
+from repro.serving.spec_scheduler import (  # noqa: F401
+    SpecConfig, SpecScheduler,
+)
 from repro.serving.step import (  # noqa: F401
-    StepFns, build_step_fns, decode_steps_fused, gate_probe, make_fused,
+    SpecStepFns, StepFns, build_spec_fns, build_step_fns,
+    decode_steps_fused, gate_probe, make_fused, make_spec_fused,
+    spec_steps_fused,
 )
 from repro.serving.spec_decode import (  # noqa: F401
     greedy_accept, rollback_cur_len, SpecResult,

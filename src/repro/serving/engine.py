@@ -36,7 +36,8 @@ from repro.serving.errors import validate_request
 from repro.serving.sampler import greedy, sample_step
 from repro.serving.scheduler import Scheduler
 from repro.serving.spec_decode import greedy_accept, rollback_cur_len
-from repro.serving.step import build_step_fns
+from repro.serving.spec_scheduler import SpecConfig, SpecScheduler
+from repro.serving.step import build_spec_fns, build_step_fns
 
 
 @dataclass
@@ -47,6 +48,10 @@ class GenStats:
     wall_s: float = 0.0
     accepted_hist: List[int] = field(default_factory=list)
     layer_aux: List[Dict] = field(default_factory=list)
+    # speculative-decoding counters (scheduler-integrated path)
+    drafted: int = 0              # draft tokens proposed
+    accepted: int = 0             # draft tokens the target accepted
+    spec_budget_exhausted: int = 0  # requests that ran out of budget
 
     @property
     def otps(self) -> float:
@@ -56,6 +61,11 @@ class GenStats:
     def mean_accepted(self) -> float:
         return float(np.mean(self.accepted_hist)) if self.accepted_hist \
             else 0.0
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Accepted / drafted (0.0 when nothing was drafted)."""
+        return self.accepted / self.drafted if self.drafted else 0.0
 
     def mean_aux(self, key: str) -> float:
         vals = [float(np.mean(a[key])) for a in self.layer_aux if key in a]
@@ -72,6 +82,9 @@ class Engine:
                  capacity_factor: float = 8.0,
                  draft: Optional[Tuple[ArchConfig, dict]] = None,
                  spec_len: int = 0,
+                 spec_rounds: int = 4,
+                 spec_budget: Optional[int] = None,
+                 spec_adapt: bool = True,
                  temperature: float = 0.0,
                  decode_chunk: int = 8,
                  dispatch: str = "auto",
@@ -79,6 +92,9 @@ class Engine:
         self.cfg, self.params = cfg, params
         self.policy = policy
         self.spec_len = spec_len
+        self.spec_rounds = spec_rounds
+        self.spec_budget = spec_budget
+        self.spec_adapt = spec_adapt
         self.temperature = temperature
         self.cache_len = cache_len
         self.force_window = force_window
@@ -116,6 +132,17 @@ class Engine:
                 dcfg, p, t, cache_len=cache_len, capacity_factor=cf))
             self._ddecode = jax.jit(lambda p, t, c: decode_step(
                 dcfg, p, t, c, capacity_factor=cf))
+        # speculative scheduler bundle (lazy compile under jit): the
+        # fused draft-then-verify scan + draft prefill, shared by every
+        # SpecScheduler / FrontDoor this engine creates
+        self._spec_fns = None
+        self._spec_fused_levels = {}
+        if draft and spec_len:
+            self._spec_fns = build_spec_fns(
+                cfg, draft[0], policy=spec_policy, spec_len=spec_len,
+                num_rounds=spec_rounds, cache_len=cache_len,
+                force_window=force_window, capacity_factor=cf,
+                dispatch=dsp)
         # shared compiled bundle for the continuous path (jit retraces
         # per batch size, so one bundle serves every generate() call)
         self._fns = build_step_fns(
@@ -134,9 +161,16 @@ class Engine:
     def make_scheduler(self, *, num_slots: int,
                        admission: str = "fcfs",
                        decode_chunk: Optional[int] = None,
+                       spec_cfg: Optional[SpecConfig] = None,
                        **robustness) -> Scheduler:
         """A Scheduler wired to this engine's compiled functions —
         the entry point for open-ended (arrival-process) serving.
+
+        An engine with a draft model and spec_len > 0 gets a
+        SpecScheduler (speculative and plain requests share one running
+        batch; submit(spec=False) opts a request out); spec_cfg
+        overrides the engine-derived SpecConfig. Other engines get the
+        plain Scheduler.
 
         decode_chunk overrides the engine default (shorter chunks trade
         throughput for admission latency under live traffic); a new
@@ -156,15 +190,31 @@ class Engine:
                     capacity_factor=self.capacity_factor,
                     dispatch=self.dispatch)
             fns = self._fns_by_chunk[decode_chunk]
-        sched = Scheduler(
-            self.cfg, self.params, num_slots=num_slots,
-            cache_len=self.cache_len, policy=self.policy,
-            admission=admission,
+        common = dict(
+            num_slots=num_slots, cache_len=self.cache_len,
+            policy=self.policy, admission=admission,
             decode_chunk=decode_chunk or self.decode_chunk,
             temperature=self.temperature, force_window=self.force_window,
             capacity_factor=self.capacity_factor, dispatch=self.dispatch,
             fns=fns, fused_cache=self._fused_levels.setdefault(
                 decode_chunk or self.decode_chunk, {}), **robustness)
+        if self._spec_fns is not None:
+            sc = spec_cfg or SpecConfig(
+                spec_len=self.spec_len, num_rounds=self.spec_rounds,
+                budget=self.spec_budget, adapt=self.spec_adapt)
+            spec_fns = self._spec_fns
+            if (sc.spec_len != self._spec_fns.spec_len
+                    or sc.num_rounds != self._spec_fns.num_rounds):
+                spec_fns = None        # SpecScheduler builds its own
+            spec_policy = self.policy \
+                if self.policy.mode in ("off", "spec") else OFF
+            common["policy"] = spec_policy
+            sched = SpecScheduler(
+                self.cfg, self.params, draft=self.draft, spec_cfg=sc,
+                spec_fns=spec_fns,
+                spec_fused_cache=self._spec_fused_levels, **common)
+        else:
+            sched = Scheduler(self.cfg, self.params, **common)
         sched._key = k
         return sched
 
@@ -187,7 +237,10 @@ class Engine:
         implementation for equivalence tests / benchmarks); the default
         path serves the batch through the continuous scheduler with all
         requests arriving at t=0, which is token-exact with lockstep
-        under greedy sampling."""
+        under greedy sampling. With a draft model (spec_len > 0) the
+        default path is the scheduler-integrated speculative subsystem
+        (serving/spec_scheduler.py) and lockstep=True is the retained
+        host-side draft/verify reference loop."""
         prompts = np.asarray(prompts)
         # front-door validation (serving/errors.py taxonomy): a prompt
         # that can't fit the cache must fail HERE with InvalidRequest,
@@ -198,7 +251,9 @@ class Engine:
             window=effective_window(self.cfg,
                                     force_window=self.force_window))
         if self.spec_len:
-            return self._generate_spec(prompts, max_new_tokens)
+            if lockstep or self.temperature != 0.0:
+                return self._generate_spec(prompts, max_new_tokens)
+            return self._generate_continuous(prompts, max_new_tokens)
         if lockstep or prefix_embeds is not None:
             return self._generate_lockstep(prompts, max_new_tokens,
                                            prefix_embeds=prefix_embeds)
@@ -222,6 +277,12 @@ class Engine:
         stats.steps = max(len(st.tokens) for st in states) - 1
         stats.layer_aux = max((st.layer_aux for st in states), key=len)
         stats.new_tokens = int(np.prod(toks.shape))  # audio: K per frame
+        if isinstance(sched, SpecScheduler):
+            stats.steps = sched.total_steps       # draft-verify rounds
+            stats.accepted_hist = list(sched.round_accept_hist)
+            stats.drafted = sched.total_drafted
+            stats.accepted = sched.total_accepted
+            stats.spec_budget_exhausted = sched.budget_exhausted_events
         stats.wall_s = time.perf_counter() - t0
         return toks, stats
 
@@ -301,6 +362,8 @@ class Engine:
             stats.steps += 1
             stats.accepted_hist.append(float(np.mean(np.asarray(
                 res.accepted))))
+            stats.drafted += Ls * B
+            stats.accepted += int(np.asarray(res.accepted).sum())
             if aux:
                 stats.layer_aux.append(
                     {k: np.asarray(v) for k, v in aux.items()})

@@ -83,10 +83,12 @@ class TokenStream:
     finish reason; ``result()``/``raise_for_status()`` map non-completed
     reasons onto the serving error taxonomy."""
 
-    def __init__(self, rid: int, prompt: np.ndarray, max_new_tokens: int):
+    def __init__(self, rid: int, prompt: np.ndarray, max_new_tokens: int,
+                 spec: bool = False):
         self.rid = rid
         self.prompt = prompt
         self.max_new_tokens = max_new_tokens
+        self.spec = spec
         self.tokens: List = []            # published (durable-visible)
         self.finish_reason: Optional[str] = None
         self.error: Optional[BaseException] = None
@@ -223,7 +225,8 @@ class FrontDoor:
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int, *,
                deadline_s: Optional[float] = None,
-               ttft_deadline_s: Optional[float] = None) -> TokenStream:
+               ttft_deadline_s: Optional[float] = None,
+               spec: Optional[bool] = None) -> TokenStream:
         """Submit a request; returns its TokenStream immediately.
 
         InvalidRequest raises synchronously (nothing journaled).
@@ -231,18 +234,24 @@ class FrontDoor:
         stream: overload="reject" turns into QueueFull /
         DeadlineUnmeetable from ``result()``; overload="shed" into the
         structured shed reason. After drain() begins, raises
-        ShuttingDown."""
+        ShuttingDown.
+
+        ``spec`` opts the request into speculative decoding (requires a
+        SpecScheduler; None = scheduler default). Resolved here so the
+        journaled record carries a concrete bool — a spec=True submit on
+        a non-spec scheduler raises synchronously, nothing journaled."""
         prompt = np.asarray(prompt)
         validate_request(
             int(prompt.shape[0]) if prompt.ndim else 0, max_new_tokens,
             cache_len=self._sched.cache_len, window=self._sched._window)
+        spec = self._sched._resolve_spec(spec)
         with self._lock:
             if not self._open:
                 raise ShuttingDown("front door is draining — admissions "
                                    "closed")
             rid = self._next_rid
             self._next_rid += 1
-            stream = TokenStream(rid, prompt, max_new_tokens)
+            stream = TokenStream(rid, prompt, max_new_tokens, spec=spec)
             self.streams[rid] = stream
             self._consumed[rid] = 0
             if self.journal is not None:
@@ -250,10 +259,12 @@ class FrontDoor:
                     "submit", rid=rid, prompt=prompt.tolist(),
                     max_new=max_new_tokens,
                     deadline_s=deadline_s,
-                    ttft_deadline_s=ttft_deadline_s)
+                    ttft_deadline_s=ttft_deadline_s,
+                    spec=spec)
             self._inbox.append(("submit", stream,
                                 {"deadline_s": deadline_s,
-                                 "ttft_deadline_s": ttft_deadline_s}))
+                                 "ttft_deadline_s": ttft_deadline_s,
+                                 "spec": spec}))
         return stream
 
     def cancel(self, rid: int) -> bool:
@@ -452,7 +463,8 @@ class FrontDoor:
                                   "tokens": list(s.tokens),
                                   "max_new": s.max_new_tokens,
                                   "reason": s.finish_reason,
-                                  "arrival_s": 0.0}
+                                  "arrival_s": 0.0,
+                                  "spec": s.spec}
             if s.finish_reason is None:
                 snap.queue.append(rid)
         slot_rids = np.full(self._sched.num_slots, -1, np.int64)
@@ -505,9 +517,16 @@ def recover(engine, *, journal_path: str,
                      **door_kw)
     if snap is not None and snap.rng_key is not None:
         door._sched._key = jnp.asarray(snap.rng_key)
+    # a journaled spec request can only be replayed speculatively if the
+    # new incarnation has a spec scheduler; otherwise degrade to plain
+    # decode — greedy speculation is token-exact, so the regenerated
+    # stream is bit-identical either way
+    spec_capable = hasattr(door._sched, "_dcache")
     for rid in sorted(table):
         r = table[rid]
-        stream = TokenStream(rid, np.asarray(r["prompt"]), r["max_new"])
+        spec = bool(r.get("spec", False)) and spec_capable
+        stream = TokenStream(rid, np.asarray(r["prompt"]), r["max_new"],
+                             spec=spec)
         door.streams[rid] = stream
         door._consumed[rid] = 0
         door._next_rid = max(door._next_rid, rid + 1)
@@ -521,7 +540,8 @@ def recover(engine, *, journal_path: str,
         stream.replayed = len(r["tokens"])   # prefix to verify-regenerate
         door._replay[rid] = list(r["tokens"])
         door._inbox.append(("submit", stream,
-                            {"deadline_s": None, "ttft_deadline_s": None}))
+                            {"deadline_s": None, "ttft_deadline_s": None,
+                             "spec": spec}))
         if r.get("cancel_requested"):    # journaled but unapplied cancel
             door._inbox.append(("cancel", rid))
     return door.start(), report

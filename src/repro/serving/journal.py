@@ -237,6 +237,7 @@ def save_snapshot(path: str, snap: Snapshot) -> None:
             "max_new": int(r["max_new"]),
             "reason": r.get("reason"),
             "arrival_s": float(r.get("arrival_s", 0.0)),
+            "spec": bool(r.get("spec", False)),
         }
     if snap.rng_key is not None:
         arrays["rng_key"] = np.asarray(snap.rng_key)
@@ -292,6 +293,7 @@ def load_snapshot(path: str) -> Optional[Snapshot]:
             "max_new": int(m["max_new"]),
             "reason": m.get("reason"),
             "arrival_s": float(m.get("arrival_s", 0.0)),
+            "spec": bool(m.get("spec", False)),
         }
     return snap
 
@@ -324,7 +326,8 @@ def fold_records(records: List[Dict],
                           "tokens": list(r["tokens"]),
                           "max_new": r["max_new"],
                           "reason": r.get("reason"),
-                          "arrival_s": r.get("arrival_s", 0.0)}
+                          "arrival_s": r.get("arrival_s", 0.0),
+                          "spec": r.get("spec", False)}
     for rec in records:
         t = rec["t"]
         if t == "submit":
@@ -334,7 +337,8 @@ def fold_records(records: List[Dict],
                               "tokens": [],
                               "max_new": rec["max_new"],
                               "reason": None,
-                              "arrival_s": rec.get("arrival_s", 0.0)}
+                              "arrival_s": rec.get("arrival_s", 0.0),
+                              "spec": rec.get("spec", False)}
         elif t == "token":
             r = table.get(rec["rid"])
             if r is None:          # token for an unjournaled submit: skip

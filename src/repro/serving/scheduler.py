@@ -139,6 +139,7 @@ class Request:
     arrival_s: float = 0.0  # relative to Scheduler.run() start
     deadline_s: Optional[float] = None
     ttft_deadline_s: Optional[float] = None
+    spec: bool = False      # decode speculatively (SpecScheduler only)
 
 
 @dataclass
@@ -158,6 +159,10 @@ class RequestState:
     t_done: float = float("nan")
     # batch-level XShare aux for every fused step this request was live in
     layer_aux: List[Dict] = field(default_factory=list)
+    # speculative-decoding accounting (SpecScheduler)
+    drafted: int = 0             # draft tokens proposed for this request
+    accepted_drafts: int = 0     # draft tokens the target accepted
+    spec_budget_exhausted: bool = False
 
     @property
     def latency_s(self) -> float:
@@ -271,6 +276,17 @@ class Scheduler:
             fused_cache if fused_cache is not None else {}
         self._fused_levels.setdefault(0, self.fns.fused)
 
+    def _resolve_spec(self, spec: Optional[bool]) -> bool:
+        """Plain scheduler: speculative requests are not supported —
+        spec=None/False is accepted (and means plain decode) so callers
+        can use one submit signature; spec=True is a caller error.
+        SpecScheduler overrides this with its own default."""
+        if spec:
+            raise ValueError(
+                "spec=True needs a SpecScheduler (engine draft model + "
+                "spec_len > 0)")
+        return False
+
     # ------------------------------------------------------------- time --
 
     def _now(self) -> float:
@@ -282,7 +298,8 @@ class Scheduler:
     def submit(self, prompt: np.ndarray, max_new_tokens: int, *,
                arrival_s: float = 0.0,
                deadline_s: Optional[float] = None,
-               ttft_deadline_s: Optional[float] = None) -> RequestState:
+               ttft_deadline_s: Optional[float] = None,
+               spec: Optional[bool] = None) -> RequestState:
         prompt = np.asarray(prompt)
         validate_request(int(prompt.shape[0]) if prompt.ndim else 0,
                          max_new_tokens, cache_len=self.cache_len,
@@ -290,7 +307,8 @@ class Scheduler:
         req = Request(rid=self._next_rid, prompt=prompt,
                       max_new_tokens=max_new_tokens, arrival_s=arrival_s,
                       deadline_s=deadline_s,
-                      ttft_deadline_s=ttft_deadline_s)
+                      ttft_deadline_s=ttft_deadline_s,
+                      spec=self._resolve_spec(spec))
         self._next_rid += 1
         st = RequestState(req=req)
         # --- bounded-queue admission control -----------------------------

@@ -9,7 +9,7 @@ per-request selection sees the (b, 1+L_s, E) gate structure.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +32,8 @@ def rollback_cur_len(cur_len: jnp.ndarray, res: "SpecResult") -> jnp.ndarray:
 
 
 def greedy_accept(verify_logits: jnp.ndarray,
-                  drafts: jnp.ndarray) -> SpecResult:
+                  drafts: jnp.ndarray,
+                  limit: Optional[jnp.ndarray] = None) -> SpecResult:
     """verify_logits: (B, 1+L_s, V) target logits for inputs
     [x0, d_1..d_Ls]; drafts: (B, L_s).
 
@@ -40,11 +41,20 @@ def greedy_accept(verify_logits: jnp.ndarray,
     d_{i+1} is accepted iff it equals argmax(logits[:, i]) and every
     earlier draft was accepted. One bonus token (the target's own pick at
     the first mismatch / after the last draft) is always emitted.
+
+    limit: optional (B,) int32 per-row cap on how many draft positions
+    may be considered (a row's effective L_s in a heterogeneous batch:
+    adaptive draft lengths, remaining-token clamps, spec budgets, or
+    plain rows riding with limit 0). accepted[b] <= limit[b]; with
+    limit[b] == 0 the row degenerates to plain greedy decode — accepted
+    0, bonus = argmax(logits[:, 0]).
     """
     B, T, _ = verify_logits.shape
     Ls = T - 1
     t_hat = jnp.argmax(verify_logits, axis=-1).astype(jnp.int32)  # (B,1+Ls)
     match = drafts == t_hat[:, :Ls]                               # (B,Ls)
+    if limit is not None:
+        match = match & (jnp.arange(Ls)[None, :] < limit[:, None])
     accepted = jnp.cumprod(match.astype(jnp.int32), axis=1).sum(axis=1)
     bonus = jnp.take_along_axis(t_hat, accepted[:, None], axis=1)[:, 0]
     # new_tokens[b] = d_1..d_n, bonus, (padding = bonus repeats, masked by

@@ -42,6 +42,7 @@ from repro.models.layers import rms_norm
 from repro.models.model import evict_slot, insert_request
 from repro.models.moe import OFF
 from repro.serving.sampler import sample_step
+from repro.serving.spec_decode import greedy_accept
 
 NO_FAULT = (-1, -1)   # disabled (slot, step) NaN-injection operand
 
@@ -116,6 +117,128 @@ def decode_steps_fused(cfg: ArchConfig, params, tok: jnp.ndarray,
     return tok, cache, toks, aux, oks, poisoned
 
 
+def spec_steps_fused(cfg: ArchConfig, params, dcfg: ArchConfig, dparams,
+                     tok: jnp.ndarray, cache: dict, dcache: dict,
+                     remaining: jnp.ndarray, budget: jnp.ndarray,
+                     draft_len: jnp.ndarray, spec_on: jnp.ndarray,
+                     priors: jnp.ndarray, *,
+                     num_rounds: int, spec_len: int,
+                     policy: XSharePolicy = OFF,
+                     force_window: Optional[int] = None,
+                     capacity_factor: float = 8.0,
+                     dispatch: str = "auto",
+                     fault: Optional[jnp.ndarray] = None):
+    """Fused draft-then-verify: `num_rounds` speculative rounds as one
+    on-device lax.scan, speculative and plain requests sharing one
+    running batch.
+
+    Each round drafts up to `spec_len` tokens per slot with the draft
+    model (inner lax.scan of spec_len+1 steps — the extra step writes
+    the last draft's KV, mirroring the lockstep reference), then runs
+    ONE target verify pass over (B, 1+spec_len) tokens — the paper's
+    amplified batch shape — routed with XSharePolicy(mode="spec") and
+    the scheduler's per-slot correlation priors. Ragged acceptance
+    (greedy_accept with a per-slot `limit`) rolls both caches back to
+    cur0 + num_new, so draft and target cur_len stay equal for every
+    speculative slot.
+
+    Heterogeneous batches fall out of the per-slot limit
+    ``lim = min(draft_len, remaining-1, budget)`` (zeroed for inactive
+    or non-speculative slots): a slot with lim == 0 degenerates exactly
+    to plain greedy decode — accepted 0, one bonus token from the
+    verify pass's position-0 logits — so plain requests ride the same
+    dispatch. Speculative slots with an exhausted budget keep drafting
+    through the draft scan (dactive) so their draft cache stays in
+    lockstep with the target cache, but accept nothing (lim == 0).
+
+    tok: (B,) each slot's last emitted (uncached) token.
+    remaining: (B,) tokens still owed (0 = empty slot).
+    budget: (B,) draft tokens each slot may still spend.
+    draft_len: (B,) per-slot adaptive draft length, <= spec_len.
+    spec_on: (B,) bool — slot runs the draft model.
+    priors: (B, E) gate-histogram correlation priors ((B, 0) when the
+    target has no router).
+    fault: optional (2,) int32 (slot, round-in-chunk) NaN injection into
+    that round's verify logits, as in decode_steps_fused.
+
+    Returns (tok', cache', dcache', remaining', budget',
+    new_tokens (R, B, spec_len+1), num_new (R, B), accepted (R, B),
+    drafted (R, B), aux, poisoned (B,)): harvest row r of slot b with
+    ``new_tokens[r, b, :num_new[r, b]]``. num_new never exceeds the
+    slot's remaining budget (the -1 in lim reserves room for the bonus
+    token), so harvested tokens need no overshoot trimming.
+    """
+    B = tok.shape[0]
+    fault = jnp.asarray(NO_FAULT if fault is None else fault, jnp.int32)
+    use_priors = priors.shape[-1] > 0
+
+    def round_body(carry, round_i):
+        tok, cache, dcache, remaining, budget, poisoned = carry
+        active = (remaining > 0) & ~poisoned
+        dactive = active & spec_on
+        lim = jnp.minimum(jnp.minimum(draft_len,
+                                      jnp.maximum(remaining - 1, 0)),
+                          budget)
+        lim = jnp.where(dactive, lim, 0).astype(jnp.int32)
+
+        # -- draft spec_len tokens (one extra step writes the last KV) --
+        def draft_body(c, _):
+            dtok, dcache = c
+            dcur0 = dcache["cur_len"]
+            dlg, dcache, _ = decode_step(
+                dcfg, dparams, dtok[:, None], dcache,
+                capacity_factor=capacity_factor, active=dactive,
+                dispatch=dispatch)
+            nxt = jnp.argmax(dlg[:, -1], axis=-1).astype(jnp.int32)
+            nxt = jnp.where(dactive, nxt, dtok)
+            dcache["cur_len"] = jnp.where(dactive, dcur0 + 1, dcur0)
+            return (nxt, dcache), nxt
+
+        dstart = dcache["cur_len"]
+        (_, dcache), douts = jax.lax.scan(
+            draft_body, (tok, dcache), None, length=spec_len + 1)
+        drafts = douts[:spec_len].T                     # (B, spec_len)
+
+        # -- single verify pass over (B, 1+spec_len) ---------------------
+        verify_in = jnp.concatenate([tok[:, None], drafts], axis=1)
+        cur0 = cache["cur_len"]
+        vlg, cache, aux = decode_step(
+            cfg, params, verify_in, cache, policy=policy,
+            spec_shape=(B, 1 + spec_len), force_window=force_window,
+            capacity_factor=capacity_factor, active=active,
+            dispatch=dispatch,
+            spec_priors=(priors * active[:, None] if use_priors else None))
+        inject = (jnp.arange(B) == fault[0]) & (round_i == fault[1])
+        vlg = jnp.where(inject[:, None, None], jnp.nan, vlg)
+        finite = jnp.isfinite(vlg).reshape(B, -1).all(axis=1)
+        ok = active & finite
+        poisoned = poisoned | (active & ~finite)
+
+        res = greedy_accept(vlg, drafts, limit=lim)
+        num_new = jnp.where(ok, res.num_new, 0).astype(jnp.int32)
+        # ragged rollback: both caches advance by this round's emission;
+        # verify KV written above cur0+num_new is dead and overwritten
+        # by later rounds (same as inactive rows on the plain path)
+        cache["cur_len"] = cur0 + num_new
+        dcache["cur_len"] = jnp.where(dactive, dstart + num_new,
+                                      dcache["cur_len"])
+        x0 = jnp.take_along_axis(res.new_tokens, res.accepted[:, None],
+                                 axis=1)[:, 0]
+        tok = jnp.where(ok, x0, tok)
+        remaining = remaining - num_new
+        budget = budget - jnp.where(dactive, lim, 0)
+        outs = (res.new_tokens, num_new, res.accepted.astype(jnp.int32),
+                lim, aux)
+        return (tok, cache, dcache, remaining, budget, poisoned), outs
+
+    carry0 = (tok, cache, dcache, remaining, budget, jnp.zeros((B,), bool))
+    (tok, cache, dcache, remaining, budget, poisoned), \
+        (new_tokens, num_new, accepted, drafted, aux) = jax.lax.scan(
+            round_body, carry0, jnp.arange(num_rounds, dtype=jnp.int32))
+    return (tok, cache, dcache, remaining, budget,
+            new_tokens, num_new, accepted, drafted, aux, poisoned)
+
+
 def gate_probe(cfg: ArchConfig, params, tokens: jnp.ndarray) -> jnp.ndarray:
     """Cheap router probe: a request's expert gate histogram (E,).
 
@@ -188,3 +311,57 @@ def build_step_fns(cfg: ArchConfig, *,
                    evict_scrub=jax.jit(
                        lambda c, s: evict_slot(c, s, scrub=True)),
                    probe=probe, decode_chunk=decode_chunk)
+
+
+# ------------------------------------------------- speculative bundle ----
+
+@dataclass
+class SpecStepFns:
+    """Compiled speculative-decoding functions layered on top of a
+    StepFns bundle (serving/spec_scheduler.py drives both)."""
+    dprefill: Callable   # (dparams, tokens) -> (lg, dcache, aux)
+    fused: Callable      # (p, dp, tok, cache, dcache, remaining, budget,
+    #                       draft_len, spec_on, priors, fault) -> 11-tuple
+    spec_len: int        # max draft tokens per round (static)
+    num_rounds: int      # draft-verify rounds per dispatch (static)
+
+
+def make_spec_fused(cfg: ArchConfig, dcfg: ArchConfig, *,
+                    policy: XSharePolicy = OFF,
+                    spec_len: int,
+                    num_rounds: int,
+                    force_window: Optional[int] = None,
+                    capacity_factor: float = 8.0,
+                    dispatch: str = "auto") -> Callable:
+    """One jitted fused spec-scan closure (split out, like make_fused,
+    so the degradation ladder can compile tightened-policy variants)."""
+    return jax.jit(lambda p, dp, tok, c, dc, rem, bud, dl, so, pri, fault:
+                   spec_steps_fused(
+                       cfg, p, dcfg, dp, tok, c, dc, rem, bud, dl, so, pri,
+                       num_rounds=num_rounds, spec_len=spec_len,
+                       policy=policy, force_window=force_window,
+                       capacity_factor=capacity_factor, dispatch=dispatch,
+                       fault=fault))
+
+
+def build_spec_fns(cfg: ArchConfig, dcfg: ArchConfig, *,
+                   policy: XSharePolicy = OFF,
+                   spec_len: int,
+                   num_rounds: int = 4,
+                   cache_len: int = 512,
+                   force_window: Optional[int] = None,
+                   capacity_factor: float = 8.0,
+                   dispatch: str = "auto") -> SpecStepFns:
+    """Speculative bundle for one (target, draft) model pair. `policy`
+    must already be spec-compatible (mode "off" or "spec" — the Engine
+    maps other modes to OFF for the verify pass, mirroring _verify)."""
+    dpre = jax.jit(lambda p, t: prefill(
+        dcfg, p, t, cache_len=cache_len,
+        capacity_factor=capacity_factor))
+    fused = make_spec_fused(cfg, dcfg, policy=policy, spec_len=spec_len,
+                            num_rounds=num_rounds,
+                            force_window=force_window,
+                            capacity_factor=capacity_factor,
+                            dispatch=dispatch)
+    return SpecStepFns(dprefill=dpre, fused=fused, spec_len=spec_len,
+                       num_rounds=num_rounds)

@@ -44,6 +44,15 @@ def engine(moe_setup):
     return Engine(cfg, params, cache_len=128, decode_chunk=4)
 
 
+@pytest.fixture(scope="module")
+def spec_engine(moe_setup):
+    """Self-draft speculative engine: every round journals a multi-token
+    burst (full acceptance), the hardest case for burst durability."""
+    cfg, params, _ = moe_setup
+    return Engine(cfg, params, cache_len=128, draft=(cfg, params),
+                  spec_len=3)
+
+
 def stream_tokens(stream):
     return np.asarray([int(t) for t in stream.tokens])
 
@@ -214,6 +223,109 @@ def test_kill_and_recover_bit_identical(engine, moe_setup, tmp_path):
     assert not tail.torn
     finished = {r["rid"] for r in tail.records if r["t"] == "finish"}
     assert finished == {0, 1, 2}
+
+
+def test_spec_streaming_bursts_token_exact(engine, spec_engine, moe_setup,
+                                           tmp_path):
+    """Speculative requests stream through the front door in multi-token
+    bursts: journaled token records really carry bursts (len > 1), the
+    submit records carry the spec flag, mixed spec+plain traffic shares
+    the batch, and every stream equals plain greedy decoding."""
+    _, _, prompts = moe_setup
+    free, _ = engine.generate(prompts, 12)
+    jp = os.path.join(tmp_path, "wal.journal")
+    door = FrontDoor(spec_engine, num_slots=2, journal_path=jp).start()
+    streams = [door.submit(prompts[b], 12, spec=(b != 1))
+               for b in range(3)]
+    door.drain(timeout=120.0)
+    for b, s in enumerate(streams):
+        assert s.finish_reason == REASON_COMPLETED
+        assert s.spec == (b != 1)
+        np.testing.assert_array_equal(stream_tokens(s), free[b])
+    tail = read_journal(jp)
+    subs = {r["rid"]: r for r in tail.records if r["t"] == "submit"}
+    assert [subs[b]["spec"] for b in range(3)] == [True, False, True]
+    bursts = [len(r["tok"]) for r in tail.records if r["t"] == "token"]
+    assert max(bursts) > 1                  # real multi-token records
+
+
+def test_spec_flag_rejected_without_spec_scheduler(engine, moe_setup):
+    """spec=True on a plain engine is a synchronous caller error —
+    nothing journaled, no stream created."""
+    _, _, prompts = moe_setup
+    door = engine.make_frontdoor(num_slots=1)
+    with pytest.raises(ValueError):
+        door.submit(prompts[0], 8, spec=True)
+    assert not door.streams
+    door.drain(timeout=60.0)
+
+
+def test_spec_kill_and_recover_bit_identical(engine, spec_engine,
+                                             moe_setup, tmp_path):
+    """The PR-9 acceptance criterion: crash mid-burst with a torn
+    journal write while speculative requests stream, recover, and every
+    stream is bit-identical to plain greedy — the journaled spec flag
+    survives the snapshot/journal round-trip so replay re-runs
+    speculatively."""
+    _, _, prompts = moe_setup
+    free, _ = engine.generate(prompts, 12)
+    jp = os.path.join(tmp_path, "wal.journal")
+    sp = os.path.join(tmp_path, "snap")
+    inj = FaultInjector([Fault("crash_mid_round", step=2),
+                         Fault("journal_torn_write", nbytes=7)])
+    door = FrontDoor(spec_engine, num_slots=2, journal_path=jp,
+                     snapshot_path=sp, snapshot_every_rounds=1,
+                     faults=inj).start()
+    streams = [door.submit(prompts[b], 12, spec=(b != 1))
+               for b in range(3)]
+    door.drain(timeout=120.0)
+    assert isinstance(door.crashed, SimulatedCrash)
+    for s in streams:
+        assert s.done
+
+    door2, report = recover(spec_engine, journal_path=jp,
+                            snapshot_path=sp, num_slots=2)
+    assert report.requests == 3
+    assert report.resumed + report.terminal == 3
+    door2.drain(timeout=120.0)
+    assert door2.crashed is None
+    for b in range(3):
+        s = door2.streams[b]
+        assert s.spec == (b != 1)           # flag survived the crash
+        assert s.finish_reason == REASON_COMPLETED
+        np.testing.assert_array_equal(stream_tokens(s), free[b])
+    stats = door2.replay_stats()
+    assert stats["mismatches"] == 0 and stats["fidelity"] == 1.0
+
+
+def test_spec_recover_degrades_on_plain_engine(engine, spec_engine,
+                                               moe_setup, tmp_path):
+    """Recovering a journal full of spec requests on an engine WITHOUT
+    a draft model must degrade them to plain decode (greedy speculation
+    is lossless, so streams stay bit-identical) instead of crashing the
+    serve thread."""
+    _, _, prompts = moe_setup
+    free, _ = engine.generate(prompts[:2], 24)
+    jp = os.path.join(tmp_path, "wal.journal")
+    # one fused spec call covers num_rounds=4 draft-verify rounds, so
+    # the horizon must outlast round 0 for the crash to fire entering
+    # fused round 1
+    inj = FaultInjector([Fault("crash_mid_round", step=1)])
+    door = FrontDoor(spec_engine, num_slots=2, journal_path=jp,
+                     fsync_every=1, faults=inj).start()
+    for b in range(2):
+        door.submit(prompts[b], 24)         # SpecScheduler default: spec
+    door.drain(timeout=120.0)
+    assert isinstance(door.crashed, SimulatedCrash)
+
+    door2, report = recover(engine, journal_path=jp, num_slots=2)
+    assert report.resumed == 2
+    door2.drain(timeout=120.0)
+    for b in range(2):
+        s = door2.streams[b]
+        assert not s.spec                   # degraded to plain decode
+        assert s.finish_reason == REASON_COMPLETED
+        np.testing.assert_array_equal(stream_tokens(s), free[b][:24])
 
 
 def test_crash_before_snapshot_recovers_from_journal_alone(

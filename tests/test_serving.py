@@ -29,12 +29,19 @@ def moe_setup():
 
 
 def test_spec_equals_plain_self_draft(moe_setup):
+    """Both speculative paths — the scheduler-integrated subsystem
+    (default) and the retained lockstep reference — must equal plain
+    greedy decoding token for token."""
     cfg, params, prompts = moe_setup
     plain, _ = Engine(cfg, params, cache_len=128).generate(prompts, 20)
-    spec, st = Engine(cfg, params, cache_len=128, draft=(cfg, params),
-                      spec_len=3).generate(prompts, 20)
+    eng = Engine(cfg, params, cache_len=128, draft=(cfg, params),
+                 spec_len=3)
+    spec, st = eng.generate(prompts, 20)
     assert np.array_equal(plain, spec)
-    assert st.mean_accepted == 3.0          # identical draft: all accepted
+    assert st.acceptance_rate == 1.0        # identical draft: all accepted
+    lock, lst = eng.generate(prompts, 20, lockstep=True)
+    assert np.array_equal(plain, lock)
+    assert lst.mean_accepted == 3.0         # full L_s every lockstep round
 
 
 def test_spec_equals_plain_perturbed_draft(moe_setup):
@@ -44,10 +51,13 @@ def test_spec_equals_plain_perturbed_draft(moe_setup):
                                                a.shape, a.dtype),
         params)
     plain, _ = Engine(cfg, params, cache_len=128).generate(prompts, 20)
-    spec, st = Engine(cfg, params, cache_len=128, draft=(cfg, pert),
-                      spec_len=3).generate(prompts, 20)
+    eng = Engine(cfg, params, cache_len=128, draft=(cfg, pert),
+                 spec_len=3)
+    spec, st = eng.generate(prompts, 20)
     assert np.array_equal(plain, spec)
-    assert 0.0 <= st.mean_accepted <= 3.0   # ragged acceptance exercised
+    assert 0.0 <= st.acceptance_rate <= 1.0  # ragged acceptance exercised
+    lock, _ = eng.generate(prompts, 20, lockstep=True)
+    assert np.array_equal(plain, lock)
 
 
 def test_spec_equals_plain_window_cache():

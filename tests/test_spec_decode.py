@@ -1,0 +1,168 @@
+"""Speculative decoding edge cases: ragged acceptance at its
+boundaries (all accepted / zero accepted / per-row limits / L_s = 1 /
+B = 1), spec budgets, and rollback_cur_len interacting with mid-stream
+eviction when slots turn over under the SpecScheduler."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.models import init_params
+from repro.serving import (Engine, SpecConfig, greedy_accept,
+                           rollback_cur_len)
+
+
+def small(name, **kw):
+    return ARCHS[name].reduced(num_layers=2, max_d_model=128,
+                               max_vocab=256, **kw)
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = small("granite-moe-1b-a400m")
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(2), (4, 12), 0, cfg.vocab_size))
+    return cfg, params, prompts
+
+
+def _logits(argmaxes, V=16):
+    """(1, T, V) logits whose per-position argmax is `argmaxes`."""
+    lg = np.full((1, len(argmaxes), V), -10.0, np.float32)
+    for i, t in enumerate(argmaxes):
+        lg[0, i, t] = 10.0
+    return jnp.asarray(lg)
+
+
+# ------------------------------------------------- greedy_accept units ----
+
+def test_all_accepted_boundary():
+    res = greedy_accept(_logits([3, 5, 7, 9]), jnp.array([[3, 5, 7]]))
+    assert int(res.accepted[0]) == 3 and int(res.num_new[0]) == 4
+    np.testing.assert_array_equal(res.new_tokens[0], [3, 5, 7, 9])
+
+
+def test_zero_accepted_boundary():
+    res = greedy_accept(_logits([4, 5, 7]), jnp.array([[3, 5]]))
+    assert int(res.accepted[0]) == 0 and int(res.num_new[0]) == 1
+    assert int(res.new_tokens[0, 0]) == 4   # bonus = target's own pick
+
+
+def test_ls_one_boundary():
+    res = greedy_accept(_logits([3, 6]), jnp.array([[3]]))
+    assert int(res.accepted[0]) == 1
+    np.testing.assert_array_equal(res.new_tokens[0], [3, 6])
+
+
+def test_limit_zero_degenerates_to_plain_greedy():
+    """limit 0 must ignore even perfectly matching drafts — the fused
+    heterogeneous batch rides plain rows through the verify pass this
+    way."""
+    res = greedy_accept(_logits([3, 5, 7, 9]), jnp.array([[3, 5, 7]]),
+                        limit=jnp.array([0]))
+    assert int(res.accepted[0]) == 0 and int(res.num_new[0]) == 1
+    assert int(res.new_tokens[0, 0]) == 3
+
+
+def test_limit_clamps_matching_prefix():
+    res = greedy_accept(_logits([3, 5, 7, 9]), jnp.array([[3, 5, 7]]),
+                        limit=jnp.array([2]))
+    assert int(res.accepted[0]) == 2
+    np.testing.assert_array_equal(res.new_tokens[0, :3], [3, 5, 7])
+
+
+def test_rollback_cur_len_is_ragged():
+    lg = jnp.concatenate([_logits([3, 5, 7, 9]), _logits([4, 5, 7, 9])])
+    res = greedy_accept(lg, jnp.array([[3, 5, 7], [3, 5, 7]]))
+    cur = rollback_cur_len(jnp.array([10, 20]), res)
+    np.testing.assert_array_equal(cur, [14, 21])
+
+
+# ---------------------------------------------- scheduler-path edges ------
+
+def test_b1_spec_equals_plain(moe_setup):
+    cfg, params, prompts = moe_setup
+    plain, _ = Engine(cfg, params, cache_len=128).generate(prompts[:1], 16)
+    spec, st = Engine(cfg, params, cache_len=128, draft=(cfg, params),
+                      spec_len=3).generate(prompts[:1], 16)
+    assert np.array_equal(plain, spec)
+    assert st.acceptance_rate == 1.0
+
+
+def test_spec_len_one_equals_plain(moe_setup):
+    cfg, params, prompts = moe_setup
+    plain, _ = Engine(cfg, params, cache_len=128).generate(prompts, 14)
+    spec, _ = Engine(cfg, params, cache_len=128, draft=(cfg, params),
+                     spec_len=1).generate(prompts, 14)
+    assert np.array_equal(plain, spec)
+
+
+def test_untrained_draft_still_exact(moe_setup):
+    """A draft that almost never agrees with the target (independent
+    random init) exercises the zero-accept path round after round —
+    output must stay exact and acceptance sane."""
+    cfg, params, prompts = moe_setup
+    junk = init_params(cfg, jax.random.PRNGKey(77))
+    plain, _ = Engine(cfg, params, cache_len=128).generate(prompts, 16)
+    spec, st = Engine(cfg, params, cache_len=128, draft=(cfg, junk),
+                      spec_len=3).generate(prompts, 16)
+    assert np.array_equal(plain, spec)
+    assert 0.0 <= st.acceptance_rate <= 1.0
+    assert st.drafted > 0
+
+
+def test_spec_budget_exhaustion_degrades_to_plain(moe_setup):
+    """A tiny per-request draft budget runs dry mid-stream: the slot
+    must keep decoding plain (lim 0) and stay token-exact, and the
+    exhaustion must be counted."""
+    cfg, params, prompts = moe_setup
+    plain, _ = Engine(cfg, params, cache_len=128).generate(prompts, 16)
+    spec, st = Engine(cfg, params, cache_len=128, draft=(cfg, params),
+                      spec_len=3, spec_budget=4).generate(prompts, 16)
+    assert np.array_equal(plain, spec)
+    assert st.spec_budget_exhausted == prompts.shape[0]
+    assert 0 < st.accepted <= st.drafted
+
+
+def test_rollback_with_mid_stream_eviction(moe_setup):
+    """More requests than slots with heterogeneous horizons and mixed
+    spec/plain flags: slots are evicted and re-admitted mid-run, so the
+    per-row draft-cache rollback must survive slot turnover. Invariants
+    (target/draft cur_len lockstep per spec slot) are checked every
+    round."""
+    cfg, params, prompts = moe_setup
+    horizons = [10, 17, 5, 12]
+    plain, _ = Engine(cfg, params, cache_len=128).generate(
+        prompts, max(horizons))
+    eng = Engine(cfg, params, cache_len=128, draft=(cfg, params),
+                 spec_len=3)
+    sched = eng.make_scheduler(num_slots=2, invariants=True)
+    sts = [sched.submit(prompts[b], horizons[b], spec=(b != 2))
+           for b in range(4)]
+    sched.run()
+    for b, st in enumerate(sts):
+        assert st.finish_reason == "completed"
+        np.testing.assert_array_equal(
+            np.asarray(st.tokens[:horizons[b]]), plain[b][:horizons[b]])
+    assert sts[2].drafted == 0              # plain rider never drafts
+    assert sum(s.drafted for s in sts) > 0
+
+
+def test_adaptive_draft_length_stays_bounded(moe_setup):
+    """With a disagreeing draft the per-slot draft length adapts down;
+    the invariant check bounds it to [min_draft, spec_len] every
+    round."""
+    cfg, params, prompts = moe_setup
+    junk = init_params(cfg, jax.random.PRNGKey(99))
+    eng = Engine(cfg, params, cache_len=128, draft=(cfg, junk),
+                 spec_len=4)
+    sched = eng.make_scheduler(
+        num_slots=2, invariants=True,
+        spec_cfg=SpecConfig(spec_len=4, min_draft=1, shrink_below=0.9,
+                            grow_above=0.99))
+    sts = [sched.submit(prompts[b], 16) for b in range(2)]
+    sched.run()
+    plain, _ = Engine(cfg, params, cache_len=128).generate(prompts[:2], 16)
+    for b, st in enumerate(sts):
+        np.testing.assert_array_equal(np.asarray(st.tokens[:16]), plain[b])
