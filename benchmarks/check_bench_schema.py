@@ -1,8 +1,8 @@
 """Sanity-check BENCH_*.json artifacts before CI uploads them.
 
 Benchmarks persist machine-read metrics (BENCH_dispatch.json,
-BENCH_spec.json, BENCH_robustness.json) that downstream tooling and the README tables
-consume. A refactor that silently renames a key, emits NaN, or drops a
+BENCH_spec.json, BENCH_ep.json, BENCH_robustness.json) that downstream
+tooling and the README tables consume. A refactor that silently renames a key, emits NaN, or drops a
 section would still "pass" the benchmark run — this checker fails the
 CI job instead.
 
@@ -79,6 +79,27 @@ SPECS: Dict[str, Dict[str, Callable[[Any], bool]]] = {
         "spec.activated_naive": _num(lo=0.0),
         "spec.activated_ratio": _num(0.0, 1.0),
         "spec.spec_budget_exhausted": _num(lo=0),
+    },
+    "BENCH_ep.json": {
+        # the expert-parallel execution acceptance criteria: the
+        # measured shard_map path must stay token-exact against the
+        # single-device sorted reference, and Algorithm 6 + hot-expert
+        # replication must cut measured peak-shard executed rows >= 2x
+        # vs baseline routing at batch 16 (mean over decode steps)
+        "ep.batch": _is(16),
+        "ep.steps": _num(lo=1),
+        "ep.exact_vs_single_device": _is(True),
+        "ep.peak_rows_ratio": _num(lo=2.0),
+        "ep.peak_rows_ratio_alg6": _num(lo=0.0),
+        "ep.a2a_bytes_baseline": _num(lo=0.0),
+        "ep.a2a_bytes_xshare": _num(lo=0.0),
+        "ep.replication_factor": _num(lo=1.0),
+        "ep.rebalances": _num(lo=0),
+        "ep.rebalances_skipped": _num(lo=0),
+        # speculative verify-batch shape B x (1 + L_s) must execute
+        # exactly too, and not regress past baseline peak rows
+        "ep.spec_peak_rows_ratio": _num(lo=1.0),
+        "ep.spec_exact_vs_single_device": _is(True),
     },
     "BENCH_robustness.json": {
         "robustness.survival_rate": _num(0.0, 1.0),

@@ -29,7 +29,8 @@ DERIVED_KEY = {
     "fig5_table4_spec": ("speedup",
                          "scheduler-spec vs plain tokens/s (OTPS model)"),
     "table1_mixed": ("mixed_gain_best", "OTPS-model gain, mixed batch"),
-    "table2_ep": ("bs16", "EP claims dict @bs16"),
+    "table2_ep": ("ep_measured",
+                  "measured EP scoreboard (shard_map, 8-dev mesh)"),
     "bs_ablation": ("reduction_bs4",
                     "activated-expert reduction @BS=4 (App B)"),
     "kernels_bench": ("bytes_at_quarter_activation",
@@ -45,13 +46,14 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke mode (reduced shapes). Without "
                          "--only, runs the dispatch shootout + spec "
-                         "scoreboard (persists BENCH_dispatch.json / "
-                         "BENCH_spec.json); with --only, runs exactly "
+                         "scoreboard + EP scoreboard (persists "
+                         "BENCH_dispatch.json / BENCH_spec.json / "
+                         "BENCH_ep.json); with --only, runs exactly "
                          "the named benches in quick mode")
     args = ap.parse_args()
     names = BENCHES if not args.only else tuple(args.only.split(","))
     if args.quick and not args.only:
-        names = ("kernels_bench", "fig5_table4_spec")
+        names = ("kernels_bench", "fig5_table4_spec", "table2_ep")
 
     results = {}
     print("name,us_per_call,derived")

@@ -157,6 +157,34 @@ class ShapeConfig:
 
 
 @dataclass(frozen=True)
+class EPConfig:
+    """Expert-parallel execution knobs (ep/ package).
+
+    num_shards:   EP mesh width (devices on the "model" axis).
+    replicate_hot: hottest experts replicated this many ways; their
+                  rows split across replicas by token-id modulus.
+    max_replicas: per-expert replica cap (None = num_shards).
+    rebalance_hysteresis: between-batch placement moves are adopted
+                  only when the predicted peak load improves by more
+                  than this relative fraction — weight redistribution
+                  isn't free, so placement must not thrash.
+    max_rows:     per-peer payload rows for the ragged all-to-all.
+                  None = worst case (always exact); "auto" = counts
+                  exchange first, pad to the per-round max (pow2
+                  bucketed); int = hard clamp with GShard drop
+                  semantics.
+    block_t:      row-tile size of the per-shard grouped GEMM
+                  (None = heuristic from dispatch.default_block_t).
+    """
+    num_shards: int = 8
+    replicate_hot: int = 0
+    max_replicas: Optional[int] = None
+    rebalance_hysteresis: float = 0.1
+    max_rows: object = None  # None | "auto" | int
+    block_t: Optional[int] = None
+
+
+@dataclass(frozen=True)
 class XSharePolicy:
     """Inference-time batch-aware expert-selection policy (the paper).
 

@@ -17,10 +17,17 @@ def activated_mask(combine: jnp.ndarray) -> jnp.ndarray:
 
 
 def per_group_load(active: jnp.ndarray, num_groups: int) -> jnp.ndarray:
-    """Per device-group activated-expert counts (contiguous partition)."""
+    """Per device-group activated-expert counts (contiguous partition).
+
+    Groups are ceil(E/G) experts wide; when E % G != 0 the trailing
+    group(s) are narrower (zero-padded), matching ``ep_select`` and the
+    EP placement baseline."""
     E = active.shape[-1]
-    assert E % num_groups == 0
-    return active.reshape(num_groups, E // num_groups).sum(axis=-1)
+    per = -(-E // num_groups)
+    padded = jnp.pad(active.astype(jnp.int32),
+                     [(0, 0)] * (active.ndim - 1)
+                     + [(0, num_groups * per - E)])
+    return padded.reshape(active.shape[:-1] + (num_groups, per)).sum(axis=-1)
 
 
 def max_group_load(active: jnp.ndarray, num_groups: int) -> jnp.ndarray:

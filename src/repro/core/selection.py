@@ -167,17 +167,24 @@ def ep_select(gates: jnp.ndarray, m_g: int, num_groups: int, k0: int,
     warm-up set on top (load may exceed m_g where warm-up is dense).
 
     gates: (T, E). Returns mask (E,).
+
+    Non-divisible E: groups are ceil(E/G) wide, the last group(s)
+    smaller — the padding slots carry -inf priority and are sliced off,
+    so they can never absorb a group's budget pick that a real expert
+    wanted (they only get picked when the group has fewer than m_g real
+    experts, in which case the slice discards them).
     """
     T, E = gates.shape
-    assert E % num_groups == 0, (E, num_groups)
-    per = E // num_groups
+    per = -(-E // num_groups)
     s0 = warmup_union(gates, k0)              # (E,)
     agg = gates.sum(axis=0)                   # (E,)
     if m_g <= 0:
         return s0 if not strict_cap else jnp.zeros((E,), bool)
     prio = agg + _BIG * s0.astype(agg.dtype)
+    prio = jnp.pad(prio, (0, num_groups * per - E),
+                   constant_values=-jnp.inf)
     grouped = prio.reshape(num_groups, per)
-    picked = topk_mask(grouped, min(m_g, per)).reshape(E)
+    picked = topk_mask(grouped, min(m_g, per)).reshape(-1)[:E]
     if strict_cap:
         return picked
     return picked | s0
@@ -290,7 +297,7 @@ def apply_policy(gates: jnp.ndarray, policy, *, top_k: int,
         assert b * t == T, (b, t, T)
         mask = spec_select(gates.reshape(b, t, E), policy.m_l,
                            policy.m_r, policy.k0, priors=priors,
-                           corr=getattr(policy, "corr", 1.0))
+                           corr=policy.corr)
     elif mode == "ep":
         mask = ep_select(gates, policy.m_g, policy.num_groups, policy.k0,
                          strict_cap=policy.strict_cap)

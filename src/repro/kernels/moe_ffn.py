@@ -208,3 +208,27 @@ def grouped_ffn(xs: jnp.ndarray, w1: jnp.ndarray, w3: jnp.ndarray,
     )(tile_eid.astype(jnp.int32), tile_valid.astype(jnp.int32),
       xs, w1, w3, w2)
     return out
+
+
+def grouped_ffn_apply(xs: jnp.ndarray, w1: jnp.ndarray, w3: jnp.ndarray,
+                      w2: jnp.ndarray, plan, *,
+                      use_kernel: Optional[bool] = None,
+                      block_f: int = 512) -> jnp.ndarray:
+    """The one resolution point for "Pallas grouped_ffn or tile-gather
+    einsum?" over a DispatchPlan layout — shared by the single-device
+    sorted pipeline (models/dispatch.sorted_expert_ffn) and the
+    per-shard grouped GEMM inside the shard_map EP executor
+    (ep/executor.py), so both paths pick the same backend the same way.
+
+    use_kernel: None = auto (the Pallas kernel wherever it would
+    compile, i.e. not interpret mode; the jnp tile-gather einsum
+    elsewhere), True/False forces.
+    """
+    if use_kernel is None:
+        use_kernel = not resolve_interpret(None)
+    if use_kernel:
+        return grouped_ffn(xs, w1, w3, w2, plan.tile_eid, plan.tile_valid,
+                           block_t=plan.block_t,
+                           block_f=min(block_f, w1.shape[2]))
+    from repro.models.dispatch import grouped_ffn_jnp
+    return grouped_ffn_jnp(xs, w1, w3, w2, plan)

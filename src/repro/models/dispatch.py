@@ -79,7 +79,8 @@ class DispatchPlan(NamedTuple):
 def dispatch_plan(idx: jnp.ndarray, w: jnp.ndarray, num_experts: int, *,
                   block_t: Optional[int] = None,
                   capacity: Optional[int] = None,
-                  max_active: Optional[int] = None) -> DispatchPlan:
+                  max_active: Optional[int] = None,
+                  pad_shards: Optional[int] = None) -> DispatchPlan:
     """Build the sorted grouped-dispatch layout.
 
     idx/w: (T, k) routing decisions; idx == -1 (masked continuous-
@@ -89,7 +90,10 @@ def dispatch_plan(idx: jnp.ndarray, w: jnp.ndarray, num_experts: int, *,
     the EP load bound); None = capacity-free. max_active: static bound
     on the number of occupied experts (XShare budget) — shrinks the
     padded buffer and tile count, i.e. the thing weight traffic scales
-    with.
+    with. pad_shards: explicit tile-axis divisibility (EP shard count);
+    None consults the ambient mesh context — the shard_map executor
+    passes 1 because its per-shard plans must not inherit the outer
+    mesh's padding.
     """
     T, k = idx.shape
     E = num_experts
@@ -97,10 +101,12 @@ def dispatch_plan(idx: jnp.ndarray, w: jnp.ndarray, num_experts: int, *,
     bt = default_block_t(N, E) if block_t is None else block_t
     occ_bound = min(E, N) if max_active is None else min(max_active, E, N)
     P = _round_up(N + occ_bound * (bt - 1), bt)
-    if current_mesh() is not None:
+    if pad_shards is None:
+        pad_shards = model_axis_size() if current_mesh() is not None else 1
+    if pad_shards > 1:
         # keep the tile axis divisible by the model axis so the sorted
         # layout can shard over it (EP)
-        P = _round_up(P, bt * model_axis_size())
+        P = _round_up(P, bt * pad_shards)
     num_tiles = P // bt
 
     flat_e = idx.reshape(N).astype(jnp.int32)
@@ -193,11 +199,16 @@ def group_token_loads(counts: jnp.ndarray, num_groups: int) -> jnp.ndarray:
     """Real per-device-group load: token-assignment rows landing on each
     contiguous expert group (the EP shard map), from actual segment
     sizes — what a device computes under sorted dispatch, as opposed to
-    the E/G * C rows the capacity-padded einsum path always pays."""
+    the E/G * C rows the capacity-padded einsum path always pays.
+
+    Non-divisible E: groups are ceil(E/G) experts wide with the last
+    group(s) smaller (zero-padded), matching ``ep_select`` and
+    ``contiguous_placement`` — the old code silently collapsed to one
+    group, reporting the whole batch as one shard's load."""
     E = counts.shape[0]
-    if E % num_groups:
-        num_groups = 1
-    return counts.reshape(num_groups, E // num_groups).sum(-1)
+    per = -(-E // num_groups)
+    padded = jnp.pad(counts, (0, num_groups * per - E))
+    return padded.reshape(num_groups, per).sum(-1)
 
 
 def sorted_expert_ffn(x: jnp.ndarray, w1: jnp.ndarray, w3: jnp.ndarray,
@@ -212,19 +223,12 @@ def sorted_expert_ffn(x: jnp.ndarray, w1: jnp.ndarray, w3: jnp.ndarray,
     use_kernel: None = auto (Pallas grouped_ffn when it would compile,
     i.e. on TPU; jnp tile-gather einsum elsewhere), True/False forces.
     """
-    from repro.kernels.compat import resolve_interpret
+    from repro.kernels.moe_ffn import grouped_ffn_apply
     T = x.shape[0]
     E = w1.shape[0]
     plan = dispatch_plan(idx, w, E, block_t=block_t, capacity=capacity,
                          max_active=max_active)
     xs = gather_tokens(x, plan)
-    if use_kernel is None:
-        use_kernel = not resolve_interpret(None)
-    if use_kernel:
-        from repro.kernels.ops import xshare_grouped_ffn
-        ys = xshare_grouped_ffn(xs, w1, w3, w2, plan.tile_eid,
-                                plan.tile_valid, block_t=plan.block_t,
-                                block_f=block_f)
-    else:
-        ys = grouped_ffn_jnp(xs, w1, w3, w2, plan)
+    ys = grouped_ffn_apply(xs, w1, w3, w2, plan, use_kernel=use_kernel,
+                           block_f=block_f)
     return combine_scatter(ys, plan, T, x.dtype)

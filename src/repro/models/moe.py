@@ -39,7 +39,7 @@ from repro.sharding import constrain, current_mesh
 
 OFF = XSharePolicy(mode="off")
 
-DISPATCH_MODES = ("auto", "sorted", "einsum", "dense")
+DISPATCH_MODES = ("auto", "sorted", "einsum", "dense", "ep")
 
 
 def policy_max_active(policy: XSharePolicy, num_tokens: int,
@@ -119,7 +119,9 @@ def route(p: Dict, x: jnp.ndarray, moe: MoEConfig, policy: XSharePolicy,
     one_hot = jax.nn.one_hot(idx, moe.num_experts, dtype=w.dtype)
     combine = (one_hot * w[..., None]).sum(axis=-2)       # (T, E)
     active = (combine > 0).any(axis=0)
-    G = policy.num_groups if moe.num_experts % policy.num_groups == 0 else 1
+    # group math handles E % G != 0 (ceil-width groups, last smaller),
+    # so no divisibility fallback: aux loads always reflect G shards
+    G = policy.num_groups
     # Switch-Transformer load-balance auxiliary: E * sum_e f_e * P_e
     # (f_e = fraction of tokens routed to e, P_e = mean router prob).
     # Real MoEs train with this — without it the router collapses and
@@ -204,12 +206,26 @@ def expert_ffn(p: Dict, x: jnp.ndarray, idx: jnp.ndarray, w: jnp.ndarray,
                  unselected. Cheapest at decode sizes where per-op
                  overhead dominates; only off-mesh (it would all-gather
                  every expert's weights onto each device).
+      "ep"     — real expert-parallel execution through the EPExecutor
+                 bound via ``repro.ep.ep_context``: per-shard sort,
+                 ragged all-to-all row exchange, local grouped GEMM on
+                 placement-assigned experts, reverse exchange + combine
+                 (ep/executor.py). Numerically exact vs "sorted"; with
+                 no executor bound it degrades to "sorted" (the
+                 bit-identical single-device path).
       "auto"   — dense for decode-sized drop-free batches off-mesh,
                  sorted otherwise.
     """
     T, d = x.shape
     E, k = moe.num_experts, idx.shape[-1]
     assert dispatch in DISPATCH_MODES, dispatch
+    if dispatch == "ep":
+        from repro import ep as EP
+        ex = EP.current_executor()
+        if ex is not None:
+            return ex.ffn(x, p["w1"], p["w3"], p["w2"], idx, w
+                          ).astype(x.dtype)
+        dispatch = "sorted"                   # graceful single-device path
     G = 1
     if T > group_size:
         for cand in range(T // group_size, 0, -1):

@@ -383,6 +383,31 @@ class Scheduler:
         st.status = new
         st.history.append(new)
 
+    # ----------------------------------------------------- expert priors --
+
+    def gate_priors(self) -> np.ndarray:
+        """Per-slot expert-affinity priors of the running batch:
+        (num_slots, E) float64, row s = slot s's best current gate-
+        histogram estimate (zeros for empty slots; E == 0 columns for
+        router-free models). The stable read API for expert-affinity
+        consumers — EP placement feeds the batch-aggregate
+        ``gate_priors().sum(0)`` into ``ep.plan_placement`` /
+        ``EPExecutor.update_placement``, and SpecScheduler's override
+        supplies Algorithm-4's correlation priors — instead of each
+        consumer poking at slot internals (``_slots[s].gate_hist``,
+        ``_slot_spec[s].prior``).
+
+        Base scheduler: the admission-time prompt gate histograms
+        (``RequestState.gate_hist``), static per request.
+        """
+        E = self.cfg.moe.num_experts if self.cfg.moe else 0
+        out = np.zeros((self.num_slots, E), np.float64)
+        if E:
+            for s, st in enumerate(self._slots):
+                if st is not None and st.gate_hist is not None:
+                    out[s] = st.gate_hist
+        return out
+
     # --------------------------------------------------------- admission --
 
     @property

@@ -205,6 +205,23 @@ class SpecScheduler(Scheduler):
             self._slot_spec[slot] = None
         super()._finish(st, slot, reason=reason, scrub=scrub)
 
+    # ----------------------------------------------------- expert priors --
+
+    def gate_priors(self) -> np.ndarray:
+        """Spec override: the EMA-maintained verify-pass priors
+        (``_SlotSpec.prior``, updated each round from the route() aux
+        ``req_gate_hist``) — fresher than the base class's static
+        admission-time histograms. Plain-decode members of the batch
+        stay zero, exactly as Algorithm-4 selection expects (they are
+        outside the per-request budget problem)."""
+        E = self.cfg.moe.num_experts if self.cfg.moe else 0
+        out = np.zeros((self.num_slots, E), np.float64)
+        if E:
+            for s, sp in enumerate(self._slot_spec):
+                if sp is not None and sp.prior is not None:
+                    out[s] = sp.prior
+        return out
+
     # ------------------------------------------------------------ decode --
 
     def _spec_fused_at(self, level: int) -> Callable:
@@ -238,7 +255,6 @@ class SpecScheduler(Scheduler):
                                           self.total_steps + R)
         else:
             fault = NO_FAULT
-        B = self.num_slots
         remaining = np.asarray(
             [st.req.max_new_tokens - len(st.tokens) if st else 0
              for st in self._slots], np.int32)
@@ -249,11 +265,7 @@ class SpecScheduler(Scheduler):
         budget = np.asarray(
             [min(sp.budget_left, _NO_BUDGET) if sp else 0
              for sp in self._slot_spec], np.int32)
-        E = self.cfg.moe.num_experts if self.cfg.moe else 0
-        priors = np.zeros((B, E), np.float32)
-        for s, sp in enumerate(self._slot_spec):
-            if sp is not None and sp.prior is not None and E:
-                priors[s] = sp.prior
+        priors = self.gate_priors().astype(np.float32)
         (self._tok, self._cache, self._dcache, _, _,
          new_tokens, num_new, accepted, drafted, aux, poisoned) = \
             self._spec_fused_at(self.level)(

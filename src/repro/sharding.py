@@ -12,6 +12,7 @@ import contextlib
 from typing import Optional, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 _STATE = {"mesh": None, "batch_axes": (), "disabled": frozenset()}
@@ -49,6 +50,31 @@ def model_axis_size() -> int:
     if mesh is None:
         return 1
     return dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+
+def get_shard_map():
+    """The shard_map entry point across jax versions: ``jax.shard_map``
+    in newer releases, the experimental module before that."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm
+    from jax.experimental.shard_map import shard_map
+    return shard_map
+
+
+def make_ep_mesh(num_shards: Optional[int] = None, axis: str = "model"):
+    """A 1-D expert-parallel mesh over the first ``num_shards`` local
+    devices (all of them by default). The axis name defaults to "model"
+    — the axis the expert dimension shards over everywhere else in the
+    repo — so EP composes with the existing partition rules."""
+    n = len(jax.devices()) if num_shards is None else num_shards
+    if n > len(jax.devices()):
+        raise ValueError(
+            f"make_ep_mesh({n}) but only {len(jax.devices())} devices "
+            f"visible (set XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count=N before importing jax to emulate)")
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()[:n]).reshape(n), (axis,))
 
 
 def constrain(x, *axes: Optional[str], tag: Optional[str] = None):

@@ -155,6 +155,37 @@ def test_affinity_admission_orders_by_overlap(moe_setup):
         assert np.array_equal(np.stack(st.tokens), solo[0])
 
 
+def test_gate_priors_stable_api(moe_setup):
+    """Scheduler.gate_priors() — the stable per-slot expert-affinity
+    read API (EP placement, affinity admission): (num_slots, E), rows
+    mirror occupied slots' gate histograms, zeros elsewhere."""
+    cfg, params, prompts = moe_setup
+    eng = Engine(cfg, params, cache_len=128, decode_chunk=2)
+    E = cfg.moe.num_experts
+    captured = []
+    sched = eng.make_scheduler(
+        num_slots=2, admission="affinity",
+        on_round=lambda s, r: captured.append(s.gate_priors()))
+    for b in range(prompts.shape[0]):
+        sched.submit(prompts[b], 6)
+    # empty batch: correct shape, all zero
+    assert sched.gate_priors().shape == (2, E)
+    assert not sched.gate_priors().any()
+    states = sched.run()
+    assert all(s.status == "done" for s in states)
+    assert captured
+    for pri in captured:
+        assert pri.shape == (2, E)
+        assert np.isfinite(pri).all() and (pri >= 0).all()
+    # a full batch mid-run carries a prior per occupied slot
+    full = max(captured, key=lambda p: (p.sum(1) > 0).sum())
+    assert (full.sum(1) > 0).all()
+    # rows are the admission-time histograms the affinity path uses
+    rows = {tuple(np.round(s.gate_hist, 12)) for s in states}
+    for r in range(2):
+        assert tuple(np.round(full[r], 12)) in rows
+
+
 def test_scheduler_latency_accounting(moe_setup):
     cfg, params, prompts = moe_setup
     eng = Engine(cfg, params, cache_len=128, decode_chunk=2)

@@ -90,6 +90,32 @@ def test_b1_spec_equals_plain(moe_setup):
     assert st.acceptance_rate == 1.0
 
 
+def test_spec_gate_priors_override(moe_setup):
+    """SpecScheduler.gate_priors() serves the EMA verify-pass priors
+    through the same stable API the base scheduler exposes — the
+    Algorithm-4 correlation priors come from here, not from ad-hoc
+    _slot_spec reads."""
+    cfg, params, prompts = moe_setup
+    eng = Engine(cfg, params, cache_len=128, draft=(cfg, params),
+                 spec_len=3)
+    E = cfg.moe.num_experts
+    captured = []
+    sched = eng.make_scheduler(
+        num_slots=2, on_round=lambda s, r: captured.append(s.gate_priors()))
+    for b in range(2):
+        # long enough to span several fused dispatches, so on_round
+        # observes slots that are still live with folded-in priors
+        sched.submit(prompts[b], 40)
+    states = sched.run()
+    assert all(s.status == "done" for s in states)
+    assert captured and all(c.shape == (2, E) for c in captured)
+    # after the first round the verify pass has folded req_gate_hist
+    # into every live spec slot's prior
+    assert any((c.sum(1) > 0).all() for c in captured)
+    for c in captured:
+        assert np.isfinite(c).all() and (c >= 0).all()
+
+
 def test_spec_len_one_equals_plain(moe_setup):
     cfg, params, prompts = moe_setup
     plain, _ = Engine(cfg, params, cache_len=128).generate(prompts, 14)
